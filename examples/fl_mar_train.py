@@ -1,0 +1,9 @@
+"""End-to-end FL-MAR: allocate -> federated training at allocated resolutions
+-> energy/time/accuracy ledger (the paper's Fig. 1 loop).
+
+    PYTHONPATH=src python examples/fl_mar_train.py
+"""
+from repro.launch.flmar import main
+
+main(["--devices", "8", "--rounds", "25", "--rho", "40",
+      "--per-client", "64"])

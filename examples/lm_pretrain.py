@@ -1,0 +1,10 @@
+"""Train a ~100M-param LM (reduced qwen2 family scaled up) for a few hundred
+steps on the synthetic pipeline — the end-to-end training driver.
+
+    PYTHONPATH=src python examples/lm_pretrain.py
+"""
+from repro.configs import get_config
+from repro.launch.train import main
+
+main(["--arch", "internlm2-20b", "--reduced", "--steps", "200",
+      "--batch", "8", "--seq", "128", "--lr", "3e-3", "--log-every", "20"])

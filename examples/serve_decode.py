@@ -1,0 +1,8 @@
+"""Serve a reduced Mixtral (SWA ring cache) with batched greedy decode.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "mixtral-8x7b", "--reduced", "--batch", "2",
+      "--prompt-len", "16", "--gen", "12"])

@@ -1,0 +1,92 @@
+"""Msgpack pytree checkpointing with sharding-aware restore.
+
+Format: a directory with `manifest.msgpack` (tree structure, shapes, dtypes)
+and one raw buffer file per leaf. Restore accepts an optional sharding pytree
+and uses jax.device_put per leaf, so restoring under a mesh re-shards.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (tuple, list)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        for k in tree._fields:
+            yield from _flatten(getattr(tree, k), f"{prefix}/{k}")
+    else:
+        yield prefix, tree
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in _flatten(tree):
+        arr = np.asarray(leaf)
+        fn = name.replace("/", "__") + ".bin"
+        manifest["leaves"][name] = dict(
+            file=fn, shape=list(arr.shape),
+            dtype=(str(arr.dtype) if arr.dtype != jnp.bfloat16 else "bfloat16"))
+        with open(os.path.join(path, fn), "wb") as f:
+            if arr.dtype == jnp.bfloat16:
+                f.write(arr.view(np.uint16).tobytes())
+            else:
+                f.write(arr.tobytes())
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def restore(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: matching pytree of NamedSharding."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves = dict(_flatten(like))
+    shard_map_ = dict(_flatten(shardings)) if shardings is not None else {}
+
+    out = {}
+    for name, meta in manifest["leaves"].items():
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            raw = f.read()
+        if meta["dtype"] == "bfloat16":
+            arr = np.frombuffer(raw, np.uint16).reshape(meta["shape"]).view()
+            arr = jnp.asarray(arr).view(jnp.bfloat16).reshape(meta["shape"])
+        else:
+            arr = jnp.asarray(np.frombuffer(raw, np.dtype(meta["dtype"]))
+                              .reshape(meta["shape"]))
+        if name in shard_map_:
+            arr = jax.device_put(arr, shard_map_[name])
+        out[name] = arr
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}/{k}" if prefix else str(k))
+                    for k in tree}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k), f"{prefix}/{k}")
+                                for k in tree._fields))
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(rebuild(v, f"{prefix}/{i}")
+                              for i, v in enumerate(tree))
+        return out[prefix]
+
+    return rebuild(like)
+
+
+def latest_step(path: str) -> Optional[int]:
+    mp = os.path.join(path, "manifest.msgpack")
+    if not os.path.exists(mp):
+        return None
+    with open(mp, "rb") as f:
+        return msgpack.unpackb(f.read()).get("step")

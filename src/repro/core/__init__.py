@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution: FL-MAR joint resource allocation.
+
+Public API:
+    make_system            build a SystemParams per the paper's §VII-A setup
+    Weights, Allocation    objective weights / decision variables
+    allocate               Algorithm 2 (BCD over SP1 + SP2)
+    allocate_fixed_deadline  deadline-constrained variant (Figs. 8-9)
+    objective, summarize   system-model evaluation (eqs. 1-13)
+"""
+from .accuracy import (AccuracyModel, LinearAccuracy, LogAccuracy,
+                       default_accuracy, linear_from_endpoints, log_fit)
+from .bcd import BCDResult, allocate, allocate_fixed_deadline, initial_allocation
+from .channel import expected_gain, make_system, sample_gain
+from .energy import (feasible, objective, round_time, summarize,
+                     total_accuracy, total_energy, total_time)
+from .types import Allocation, SystemParams, Weights, dbm_to_watt
+
+__all__ = [
+    "AccuracyModel", "LinearAccuracy", "LogAccuracy", "default_accuracy",
+    "linear_from_endpoints", "log_fit", "BCDResult", "allocate",
+    "allocate_fixed_deadline", "initial_allocation", "expected_gain",
+    "make_system", "sample_gain", "feasible", "objective", "round_time",
+    "summarize", "total_accuracy", "total_energy", "total_time",
+    "Allocation", "SystemParams", "Weights", "dbm_to_watt",
+]

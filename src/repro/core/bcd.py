@@ -1,0 +1,165 @@
+"""Algorithm 2: full BCD resource-allocation loop (paper §V-D)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import energy as en
+from .accuracy import AccuracyModel, default_accuracy
+from .sp1 import solve_sp1, solve_sp1_fixed_T
+from .sp2 import SP2Result, r_min, solve_sp2, solve_sp2_direct
+from .types import Allocation, SystemParams, Weights
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class BCDResult:
+    allocation: Allocation
+    objective: float
+    history: List[dict]
+    iters: int
+    converged: bool
+
+
+def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
+                       bandwidth_frac: float = 1.0) -> Allocation:
+    """Feasible start: p = pmax, B = B/N (paper init; Fig. 9 uses B/(2N))."""
+    n = sys.n
+    return Allocation(
+        bandwidth=jnp.full((n,), sys.bandwidth_total / n * bandwidth_frac),
+        power=jnp.full((n,), sys.p_max),
+        freq=jnp.full((n,), sys.f_max),
+        resolution=jnp.full((n,), sys.s_lo),
+    )
+
+
+def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
+             max_iters: int = 20, tol: float = 1e-6,
+             init: Optional[Allocation] = None,
+             sp2_iters: int = 30, sp2_method: str = "direct") -> BCDResult:
+    """Algorithm 2: alternate SP1 (f, s, T) and SP2 (p, B) until convergence.
+
+    sp2_method: "direct" (exact boundary-power convex solve, beyond-paper,
+    the default engine) or "jong" (the paper's Algorithm 1 Newton-like loop).
+    """
+    acc = acc if acc is not None else default_accuracy()
+    w = w.normalized()
+    alloc = init if init is not None else initial_allocation(sys)
+    history: List[dict] = []
+    prev = alloc.flat()
+    converged = False
+    k = 0
+    for k in range(1, max_iters + 1):
+        f, s, s_hat, T = solve_sp1(sys, w, acc, alloc.bandwidth, alloc.power)
+        rmin = r_min(sys, f, s, T)
+        if sp2_method == "direct":
+            p_new, B_new = solve_sp2_direct(sys, rmin)
+            sp2 = SP2Result(power=p_new, bandwidth=B_new, nu=None, beta=None,
+                            iters=0, residual=0.0)
+        else:
+            sp2 = solve_sp2(sys, w, rmin, alloc.power, alloc.bandwidth,
+                            max_iters=sp2_iters)
+        alloc = Allocation(bandwidth=sp2.bandwidth, power=sp2.power,
+                           freq=f, resolution=s, s_relaxed=s_hat, T=T)
+        history.append(dict(
+            iter=k,
+            objective=float(en.objective(sys, w, acc, alloc)),
+            energy=float(en.total_energy(sys, alloc)),
+            time=float(en.total_time(sys, alloc)),
+            accuracy=float(en.total_accuracy(acc, alloc)),
+            sp2_iters=sp2.iters, sp2_residual=sp2.residual,
+        ))
+        cur = alloc.flat()
+        rel = float(jnp.linalg.norm(cur - prev) / jnp.maximum(jnp.linalg.norm(prev), 1e-12))
+        prev = cur
+        if rel <= tol:
+            converged = True
+            break
+    return BCDResult(allocation=alloc,
+                     objective=history[-1]["objective"] if history else float("nan"),
+                     history=history, iters=k, converged=converged)
+
+
+def _optimal_split(sys: SystemParams, s: Array, bandwidth: Array,
+                   T_round: float, iters: int = 48) -> Array:
+    """Per-device golden-section over the transmission-time share tt of the
+    round deadline:  E(tt) = kappa cyc^3 / (T-tt)^2 + E_trans_min(tt | B),
+    both terms convex. Returns tt* clipped to the feasible window."""
+    gold = 0.6180339887498949
+    cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
+
+    def energy(tt):
+        f = jnp.clip(cyc / jnp.maximum(T_round - tt, 1e-9), sys.f_min, sys.f_max)
+        e_cmp = sys.kappa * cyc * f ** 2
+        r_req = sys.bits / jnp.maximum(tt, 1e-9)
+        theta = jnp.exp2(r_req / jnp.maximum(bandwidth, 1e-9)) - 1.0
+        p = jnp.clip(theta * sys.noise_psd * bandwidth / sys.gain,
+                     sys.p_min, sys.p_max)
+        return e_cmp + p * tt
+
+    tt_min = sys.bits / jnp.maximum(
+        bandwidth * jnp.log2(1.0 + sys.gain * sys.p_max
+                             / (sys.noise_psd * jnp.maximum(bandwidth, 1e-9))),
+        1e-12)
+    a = jnp.minimum(tt_min, 0.95 * T_round)
+    b = jnp.full_like(a, 0.95 * T_round)
+    for _ in range(iters):
+        c = b - gold * (b - a)
+        d = a + gold * (b - a)
+        left = energy(c) < energy(d)
+        a = jnp.where(left, a, c)
+        b = jnp.where(left, d, b)
+    return jnp.clip(0.5 * (a + b), tt_min, 0.95 * T_round)
+
+
+def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
+                            acc: Optional[AccuracyModel] = None,
+                            max_iters: int = 20, tol: float = 1e-6,
+                            init: Optional[Allocation] = None,
+                            bandwidth_frac: float = 1.0) -> BCDResult:
+    """Deadline-constrained variant (Figs. 8-9): total completion time is a hard
+    constraint, the objective is (mostly) energy: w1 ~ 0.99, w2 ~ 0.01."""
+    acc = acc if acc is not None else default_accuracy()
+    w = w.normalized()
+    T_round = T_total / sys.global_rounds
+    alloc = init if init is not None else initial_allocation(sys, bandwidth_frac=bandwidth_frac)
+    history: List[dict] = []
+    prev = alloc.flat()
+    converged = False
+    k = 0
+    for k in range(1, max_iters + 1):
+        f, s = solve_sp1_fixed_T(sys, w, acc, alloc.bandwidth, alloc.power, T_round)
+        # Break the BCD split deadlock: with a hard deadline, SP1 pins
+        # t_cmp = T - t_trans(current p, B), so SP2's rate floor equals the
+        # current rate and (p, B) can never move. Re-derive the floor from the
+        # per-device OPTIMAL compute/transmit split (convex in t_trans:
+        # E_cmp = kappa cyc^3/(T-tt)^2 rises, E_trans falls; golden section).
+        tt_opt = _optimal_split(sys, s, alloc.bandwidth, float(T_round))
+        rmin = sys.bits / tt_opt
+        p_new, B_new = solve_sp2_direct(sys, rmin)
+        # recompute f against the achieved transmission time
+        from .energy import rate as _rate
+        tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
+        cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
+        f = jnp.clip(cyc / jnp.maximum(T_round - tt_new, 1e-9),
+                     sys.f_min, sys.f_max)
+        alloc = Allocation(bandwidth=B_new, power=p_new,
+                           freq=f, resolution=s, T=jnp.asarray(T_round))
+        history.append(dict(
+            iter=k,
+            energy=float(en.total_energy(sys, alloc)),
+            time=float(en.total_time(sys, alloc)),
+            accuracy=float(en.total_accuracy(acc, alloc)),
+        ))
+        cur = alloc.flat()
+        rel = float(jnp.linalg.norm(cur - prev) / jnp.maximum(jnp.linalg.norm(prev), 1e-12))
+        prev = cur
+        if rel <= tol:
+            converged = True
+            break
+    return BCDResult(allocation=alloc, objective=history[-1]["energy"],
+                     history=history, iters=k, converged=converged)

@@ -1,0 +1,79 @@
+"""Wireless channel substrate (paper §VII-A).
+
+Pathloss model: 128.1 + 37.6 log10(d_km) dB plus 8 dB lognormal shadow
+fading; devices uniform in a square area with the base station at the
+center; FDMA uplink; N0 = -174 dBm/Hz.
+
+The paper optimizes against the *expected* channel gain E[G_n]
+(justified via Jensen's inequality, §III-B); `expected_gain` provides it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import DEFAULTS, SystemParams
+
+
+def device_positions(key: jax.Array, n: int, area_m: float) -> jax.Array:
+    """Uniform positions in [-area/2, area/2]^2; BS at origin. Returns (n,2) meters."""
+    return (jax.random.uniform(key, (n, 2)) - 0.5) * area_m
+
+
+def pathloss_db(distance_m: jax.Array) -> jax.Array:
+    d_km = jnp.maximum(distance_m, 1.0) / 1000.0
+    return 128.1 + 37.6 * jnp.log10(d_km)
+
+
+def expected_gain(key: jax.Array, n: int, area_m: float,
+                  shadowing_db: float) -> jax.Array:
+    """E[G_n]: linear-scale expected gain with lognormal shadowing.
+
+    For shadowing X ~ N(0, sigma^2) in dB, E[10^(X/10)] = exp((sigma*ln10/10)^2/2);
+    we fold that factor into the expectation rather than sampling it, matching
+    the paper's use of E[G_n] in eqs. (1)-(2).
+    """
+    kp, = jax.random.split(key, 1)
+    pos = device_positions(kp, n, area_m)
+    dist = jnp.linalg.norm(pos, axis=-1)
+    pl_db = pathloss_db(dist)
+    sigma = shadowing_db * jnp.log(10.0) / 10.0
+    shadow_mean = jnp.exp(sigma ** 2 / 2.0)
+    return 10.0 ** (-pl_db / 10.0) * shadow_mean
+
+
+def sample_gain(key: jax.Array, expected: jax.Array, shadowing_db: float) -> jax.Array:
+    """Draw one realization g_{n,r} of the channel for a global round."""
+    sigma = shadowing_db * jnp.log(10.0) / 10.0
+    # divide out the folded-in mean so that E[sample] == expected
+    shadow_mean = jnp.exp(sigma ** 2 / 2.0)
+    z = jax.random.normal(key, expected.shape)
+    return expected / shadow_mean * jnp.exp(sigma * z)
+
+
+def make_system(key: jax.Array, n_devices: int | None = None, **overrides) -> SystemParams:
+    """Build a SystemParams with the paper's §VII-A parameterization."""
+    cfg = dict(DEFAULTS)
+    cfg.update(overrides)
+    n = int(n_devices if n_devices is not None else cfg["n_devices"])
+    k_gain, k_cyc = jax.random.split(key)
+    gain = expected_gain(k_gain, n, cfg["area_m"], cfg["shadowing_db"])
+    cycles = jax.random.uniform(k_cyc, (n,), minval=cfg["cycles_lo"], maxval=cfg["cycles_hi"])
+    return SystemParams(
+        gain=gain,
+        cycles=cycles,
+        samples=jnp.full((n,), float(cfg["samples_per_device"])),
+        bits=jnp.full((n,), float(cfg["upload_bits"])),
+        bandwidth_total=float(cfg["bandwidth_total"]),
+        noise_psd=float(cfg["noise_psd"]),
+        p_min=float(cfg["p_min"]),
+        p_max=float(cfg["p_max"]),
+        f_min=float(cfg["f_min"]),
+        f_max=float(cfg["f_max"]),
+        kappa=float(cfg["kappa"]),
+        local_iters=float(cfg["local_iters"]),
+        global_rounds=float(cfg["global_rounds"]),
+        resolutions=tuple(float(s) for s in cfg["resolutions"]),
+        s_standard=float(cfg["s_standard"]),
+    )

@@ -1,0 +1,95 @@
+"""System model: rate, time, energy, and the paper's objective (eqs. 1-13)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import Allocation, SystemParams, Weights
+from .accuracy import AccuracyModel
+
+Array = jnp.ndarray
+
+
+def rate(sys: SystemParams, bandwidth: Array, power: Array) -> Array:
+    """Shannon uplink rate r_n = B_n log2(1 + g_n p_n / (N0 B_n))  (eq. 1)."""
+    b = jnp.maximum(bandwidth, 1e-9)
+    snr = sys.gain * power / (sys.noise_psd * b)
+    return b * jnp.log2(1.0 + snr)
+
+
+def t_trans(sys: SystemParams, bandwidth: Array, power: Array) -> Array:
+    """Uplink transmission time per global round T_n^trans = d_n / r_n  (eq. 2)."""
+    return sys.bits / jnp.maximum(rate(sys, bandwidth, power), 1e-12)
+
+
+def cycles_per_round(sys: SystemParams, resolution: Array) -> Array:
+    """R_l * zeta * s_n^2 * c_n * D_n  (eqs. 7, 10): CPU cycles per global round."""
+    return sys.local_iters * sys.zeta * resolution ** 2 * sys.cycles * sys.samples
+
+
+def t_cmp(sys: SystemParams, freq: Array, resolution: Array) -> Array:
+    """Local computation time per global round (eq. 10)."""
+    return cycles_per_round(sys, resolution) / jnp.maximum(freq, 1e-9)
+
+
+def e_cmp(sys: SystemParams, freq: Array, resolution: Array) -> Array:
+    """Local computation energy per global round (eq. 8)."""
+    return sys.kappa * cycles_per_round(sys, resolution) * freq ** 2
+
+
+def e_trans(sys: SystemParams, bandwidth: Array, power: Array) -> Array:
+    """Transmission energy per global round (eq. 3)."""
+    return power * t_trans(sys, bandwidth, power)
+
+
+def total_energy(sys: SystemParams, alloc: Allocation) -> Array:
+    """E = R_g sum_n (E_trans + E_cmp)  (eq. 9)."""
+    return sys.global_rounds * jnp.sum(
+        e_trans(sys, alloc.bandwidth, alloc.power)
+        + e_cmp(sys, alloc.freq, alloc.resolution))
+
+
+def round_time(sys: SystemParams, alloc: Allocation) -> Array:
+    """Per-round makespan max_n (T_cmp + T_trans)."""
+    return jnp.max(t_cmp(sys, alloc.freq, alloc.resolution)
+                   + t_trans(sys, alloc.bandwidth, alloc.power))
+
+
+def total_time(sys: SystemParams, alloc: Allocation) -> Array:
+    """T = R_g max_n (T_cmp + T_trans)  (eq. 11)."""
+    return sys.global_rounds * round_time(sys, alloc)
+
+
+def total_accuracy(acc: AccuracyModel, alloc: Allocation) -> Array:
+    """A = sum_n A_n(s_n)  (§III-C)."""
+    return jnp.sum(acc.value(alloc.resolution))
+
+
+def objective(sys: SystemParams, w: Weights, acc: AccuracyModel, alloc: Allocation) -> Array:
+    """w1 E + w2 T - rho A  (eq. 12)."""
+    return (w.w1 * total_energy(sys, alloc)
+            + w.w2 * total_time(sys, alloc)
+            - w.rho * total_accuracy(acc, alloc))
+
+
+def feasible(sys: SystemParams, alloc: Allocation, atol: float = 1e-6) -> bool:
+    """Check constraints (12a)-(12d)."""
+    b_ok = bool(jnp.all(alloc.bandwidth >= -atol)
+                and jnp.sum(alloc.bandwidth) <= sys.bandwidth_total * (1 + 1e-6) + atol)
+    p_ok = bool(jnp.all(alloc.power >= sys.p_min - atol)
+                and jnp.all(alloc.power <= sys.p_max * (1 + 1e-9) + atol))
+    f_ok = bool(jnp.all(alloc.freq >= sys.f_min - atol)
+                and jnp.all(alloc.freq <= sys.f_max * (1 + 1e-9) + atol))
+    res = jnp.asarray(sys.resolutions)
+    s_ok = bool(jnp.all(jnp.min(jnp.abs(alloc.resolution[:, None] - res[None, :]), axis=1) < 1e-3))
+    return b_ok and p_ok and f_ok and s_ok
+
+
+def summarize(sys: SystemParams, w: Weights, acc: AccuracyModel, alloc: Allocation) -> dict:
+    return dict(
+        energy_J=float(total_energy(sys, alloc)),
+        time_s=float(total_time(sys, alloc)),
+        accuracy=float(total_accuracy(acc, alloc)),
+        objective=float(objective(sys, w, acc, alloc)),
+        energy_trans_J=float(sys.global_rounds * jnp.sum(e_trans(sys, alloc.bandwidth, alloc.power))),
+        energy_cmp_J=float(sys.global_rounds * jnp.sum(e_cmp(sys, alloc.freq, alloc.resolution))),
+    )

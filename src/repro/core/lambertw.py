@@ -1,0 +1,38 @@
+"""Principal-branch Lambert W in pure JAX (needed by SP2's dual, eq. A.22).
+
+W0(z) for z >= -1/e, via a branch-aware initial guess + Halley iterations.
+Accurate to ~1e-12 in float64 across the domain used by the allocator.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_INV_E = -0.36787944117144233  # -1/e
+
+
+def lambertw0(z, iters: int = 24):
+    z = jnp.asarray(z)
+    zc = jnp.maximum(z, _INV_E)  # clamp below branch point (callers guard)
+
+    # --- initial guess -----------------------------------------------------
+    # near the branch point: w ~ -1 + p - p^2/3 + 11 p^3/72, p = sqrt(2(e z + 1))
+    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * zc + 1.0), 0.0))
+    w_branch = -1.0 + p - p * p / 3.0 + 11.0 * p ** 3 / 72.0
+    # large z: asymptotic L1 - L2 + L2/L1
+    lz = jnp.log(jnp.maximum(zc, 1e-300))
+    llz = jnp.log(jnp.maximum(lz, 1e-300))
+    w_big = lz - llz + llz / jnp.maximum(lz, 1e-12)
+    # moderate z: series around 0
+    w_small = zc * (1.0 - zc + 1.5 * zc * zc)
+    w = jnp.where(zc < -0.25, w_branch, jnp.where(zc > 3.0, w_big, w_small))
+    w = jnp.maximum(w, -1.0 + 1e-12)
+
+    # --- Halley refinement -------------------------------------------------
+    for _ in range(iters):
+        ew = jnp.exp(w)
+        f = w * ew - zc
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
+        step = f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom)
+        w = jnp.maximum(w - step, -1.0 + 1e-15)
+    return w

@@ -1,0 +1,183 @@
+"""Subproblem 1 (paper §V-A, Appendix B): optimize (f, s, T) given (p, B).
+
+    min_{f, s_hat, T}  w1 Rg sum_n alpha_n s_hat^2 f^2 + w2 Rg T - rho sum_n A_n(s_hat)
+    s.t. f in [fmin, fmax], s_hat in [s_lo, s_hi],
+         q_n s_hat^2 / f + T_trans_n <= T
+
+KKT structure (paper eqs. A.2-A.7):
+    f_n*(lambda)     = cbrt(lambda_n / (2 w1 Rg kappa))            clipped to box
+    s_hat_n*(lambda) solves  s * (2 a_n f^2 + 2 lambda q_n / f) = rho A_n'(s)
+    sum_n lambda_n   = w2 Rg
+
+Instead of CVX on the dual (A.8) we solve the KKT system exactly by nested
+bisection ("water-filling"):
+  * inner: lambda_n(T) s.t. the per-device makespan T_n(lambda) = T
+           (T_n is strictly decreasing in lambda until the boxes clip);
+  * outer: T s.t. sum_n lambda_n(T) = w2 Rg.
+This supports any concave accuracy model A_n, not just the paper's linear
+special case (DESIGN.md §5). Fully jitted (lax.fori_loop bisections).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .accuracy import AccuracyModel, LinearAccuracy
+from .types import SystemParams, Weights
+
+Array = jnp.ndarray
+
+_INNER_ITERS = 56
+_OUTER_ITERS = 56
+_S_ITERS = 48
+
+
+def _coeffs(sys: SystemParams, w: Weights):
+    """alpha_n (energy coeff, incl. w1 Rg) and q_n (cycles per s^2)."""
+    q = sys.local_iters * sys.zeta * sys.cycles * sys.samples
+    alpha = w.w1 * sys.global_rounds * sys.kappa * q
+    return alpha, q
+
+
+def _f_of_lambda(sys: SystemParams, w: Weights, lam: Array) -> Array:
+    f_unc = jnp.cbrt(lam / jnp.maximum(2.0 * w.w1 * sys.global_rounds * sys.kappa, 1e-300))
+    return jnp.clip(f_unc, sys.f_min, sys.f_max)
+
+
+def _s_of_lambda(sys: SystemParams, w: Weights, acc: AccuracyModel, lam: Array) -> Array:
+    """Solve s*(2 a f^2 + 2 lam q / f) = rho A'(s) on [s_lo, s_hi]."""
+    alpha, q = _coeffs(sys, w)
+    f = _f_of_lambda(sys, w, lam)
+    psi = 2.0 * alpha * f ** 2 + 2.0 * lam * q / jnp.maximum(f, 1e-9)
+
+    if isinstance(acc, LinearAccuracy):
+        s_unc = w.rho * acc.slope / jnp.maximum(psi, 1e-300)
+        return jnp.clip(s_unc, sys.s_lo, sys.s_hi)
+
+    def h(s):  # increasing in s (A concave)
+        return s * psi - w.rho * acc.deriv(s)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        pos = h(mid) > 0
+        return jnp.where(pos, lo, mid), jnp.where(pos, mid, hi)
+
+    lo0 = jnp.full_like(lam, sys.s_lo)
+    hi0 = jnp.full_like(lam, sys.s_hi)
+    lo, hi = lax.fori_loop(0, _S_ITERS, body, (lo0, hi0))
+    s = 0.5 * (lo + hi)
+    s = jnp.where(h(lo0) >= 0, sys.s_lo, s)
+    s = jnp.where(h(hi0) <= 0, sys.s_hi, s)
+    return s
+
+
+def _makespan_of_lambda(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                        lam: Array, tt: Array) -> Array:
+    _, q = _coeffs(sys, w)
+    f = _f_of_lambda(sys, w, lam)
+    s = _s_of_lambda(sys, w, acc, lam)
+    return q * s ** 2 / jnp.maximum(f, 1e-9) + tt
+
+
+def _lambda_of_T(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                 T: Array, tt: Array, lam_hi: float) -> Array:
+    """Per-device inverse of the decreasing map lambda -> T_n(lambda)."""
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_slow = _makespan_of_lambda(sys, w, acc, mid, tt) > T
+        return jnp.where(too_slow, mid, lo), jnp.where(too_slow, hi, mid)
+
+    lo0 = jnp.zeros_like(tt)
+    hi0 = jnp.full_like(tt, lam_hi)
+    lo, hi = lax.fori_loop(0, _INNER_ITERS, body, (lo0, hi0))
+    lam = 0.5 * (lo + hi)
+    fast = _makespan_of_lambda(sys, w, acc, jnp.zeros_like(tt), tt) <= T
+    return jnp.where(fast, 0.0, lam)
+
+
+def round_resolution(sys: SystemParams, s_hat: Array) -> Array:
+    """Discrete mapping of eq. (20): nearest resolution by midpoint thresholds."""
+    res = jnp.asarray(sys.resolutions)
+    idx = jnp.argmin(jnp.abs(s_hat[:, None] - res[None, :]), axis=1)
+    return res[idx]
+
+
+@partial(jax.jit, static_argnames=("acc",))
+def _solve_sp1_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
+                    tt: Array):
+    w = Weights(warr[0], warr[1], warr[2])
+    _, q = _coeffs(sys, w)
+    lam_hi = jnp.maximum(jnp.maximum(
+        2.0 * w.w1 * sys.global_rounds * sys.kappa * sys.f_max ** 3,
+        w.w2 * sys.global_rounds), 1.0) * 1e4
+    target = w.w2 * sys.global_rounds
+
+    T_lo = jnp.max(q * sys.s_lo ** 2 / sys.f_max + tt) * (1.0 + 1e-12)
+    T_hi = jnp.max(q * sys.s_hi ** 2 / max(sys.f_min, 1e-3) + tt) * 2.0
+    T_hi = jnp.asarray(T_hi, T_lo.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        lam = _lambda_of_T(sys, w, acc, mid, tt, lam_hi)
+        more_time = jnp.sum(lam) > target      # lambda too large -> raise T
+        return jnp.where(more_time, mid, lo), jnp.where(more_time, hi, mid)
+
+    lo, hi = lax.fori_loop(0, _OUTER_ITERS, body, (T_lo, T_hi))
+    T = 0.5 * (lo + hi)
+
+    lam = _lambda_of_T(sys, w, acc, T, tt, lam_hi)
+    f = _f_of_lambda(sys, w, lam)                      # eq. (19)
+    s_hat = _s_of_lambda(sys, w, acc, lam)
+    s = round_resolution(sys, s_hat)                   # eq. (20)
+    # makespan consistent with the discrete s (feeds SP2's r_min)
+    T_out = jnp.max(q * s ** 2 / jnp.maximum(f, 1e-9) + tt)
+    return f, s, s_hat, jnp.maximum(T, T_out)
+
+
+def solve_sp1(sys: SystemParams, w: Weights, acc: AccuracyModel,
+              bandwidth: Array, power: Array) -> Tuple[Array, Array, Array, Array]:
+    """Returns (f, s_discrete, s_hat, T).  T is the per-round makespan consistent
+    with the rounded resolution (used by SP2 for r_n^min)."""
+    from .energy import rate
+
+    tt = sys.bits / jnp.maximum(rate(sys, bandwidth, power), 1e-12)
+    warr = jnp.asarray([w.w1, max(w.w2, 1e-9), w.rho], tt.dtype)
+    return _solve_sp1_impl(sys, warr, acc, tt)
+
+
+@partial(jax.jit, static_argnames=("acc",))
+def _solve_sp1_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
+                          tt: Array, T_round: Array):
+    w = Weights(warr[0], warr[1], warr[2])
+    alpha, q = _coeffs(sys, w)
+    res = jnp.asarray(sys.resolutions)                      # (M,)
+    budget = jnp.maximum(T_round - tt, 1e-9)[:, None]       # (N,1)
+    f_req = q[:, None] * res[None, :] ** 2 / budget         # (N,M)
+    feas = f_req <= sys.f_max * (1.0 + 1e-9)
+    f_opt = jnp.clip(f_req, sys.f_min, sys.f_max)
+    obj = alpha[:, None] * res[None, :] ** 2 * f_opt ** 2 - w.rho * acc.value(res)[None, :]
+    obj = jnp.where(feas, obj, jnp.inf)
+    pick = jnp.argmin(obj, axis=1)
+    return f_opt[jnp.arange(tt.shape[0]), pick], res[pick]
+
+
+def solve_sp1_fixed_T(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                      bandwidth: Array, power: Array, T_round: float
+                      ) -> Tuple[Array, Array]:
+    """Deadline-constrained variant used by the Fig. 8/9 comparisons: the round
+    deadline is a hard constraint (no w2*T term). s is discrete with M options,
+    so each device is solved *exactly* by enumeration: the smallest feasible
+    f (energy rises with f) per option, then argmin over options of
+    w1 Rg kappa q s^2 f^2 - rho A(s).  Returns (f, s)."""
+    from .energy import rate
+
+    tt = sys.bits / jnp.maximum(rate(sys, bandwidth, power), 1e-12)
+    warr = jnp.asarray([w.w1, w.w2, w.rho], tt.dtype)
+    return _solve_sp1_fixed_impl(sys, warr, acc, tt, jnp.asarray(T_round, tt.dtype))

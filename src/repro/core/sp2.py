@@ -1,0 +1,346 @@
+"""Subproblem 2 (paper §V-B/C, Appendix D): optimize (p, B) given (f, s, T).
+
+    min_{p,B} w1 Rg sum_n p_n d_n / G_n(p_n, B_n)
+    s.t. sum B_n <= B, 0 <= B_n, pmin <= p_n <= pmax,
+         G_n(p_n, B_n) >= r_n^min = d_n / (T - T_cmp_n)
+
+Sum-of-ratios program solved with Jong's parametric transform (Theorem 1):
+introduce (nu, beta) and iterate the damped Newton-like update of Algorithm 1
+(eqs. 24-30) around an exact solve of the convex subtractive-form problem
+
+    SP2_v2: min_{p,B} sum_n nu_n (p_n d_n - beta_n G_n(p_n, B_n))   (eq. 22)
+
+The paper solves SP2_v2 with CVX, supported by the Theorem-2 closed forms.
+We solve it EXACTLY without a generic solver, exploiting separability:
+
+  * inner-inner: for fixed B_n, the optimal power is the stationary point
+        p_int = (Lambda0_n - 1) N0 B_n / g_n,  Lambda0_n = beta_n g_n/(N0 d_n ln2)
+    (eq. A.16 with tau=0) clipped to [max(pmin, p_rate(B)), pmax], where
+    p_rate enforces the rate constraint (21a);
+  * per-device: h_n(B) = nu_n (p*(B) d_n - beta_n G(p*(B), B)) is convex
+    (partial minimization of a jointly convex function) and strictly
+    decreasing, minimized by golden-section;
+  * budget: the bandwidth cap binds; a bisection on its multiplier mu
+    (exactly the mu of A.15) waterfills sum B_n = B.
+
+`solve_sp2_v2_thm2` keeps the paper's literal Appendix-D path (Lambert-W dual
+A.22/A.23, Theorem-2 closed forms) — used as a cross-check in tests; it agrees
+with the exact solver whenever all rate constraints are tight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lambertw import lambertw0
+from .types import SystemParams, Weights
+
+Array = jnp.ndarray
+
+_GOLD = 0.6180339887498949
+
+
+def G(sys: SystemParams, p: Array, B: Array) -> Array:
+    """G_n(p,B) = B log2(1 + g p / (N0 B)) — the rate (eq. 1), concave (Lemma 1)."""
+    b = jnp.maximum(B, 1e-12)
+    return b * jnp.log2(1.0 + sys.gain * p / (sys.noise_psd * b))
+
+
+def r_min(sys: SystemParams, freq: Array, resolution: Array, T_round: Array) -> Array:
+    """r_n^min = d_n / (T - R_l zeta s^2 c D / f)   (§V-B)."""
+    t_cmp = sys.local_iters * sys.zeta * resolution ** 2 * sys.cycles * sys.samples \
+        / jnp.maximum(freq, 1e-9)
+    slack = jnp.maximum(T_round - t_cmp, 1e-9)
+    return sys.bits / slack
+
+
+def _clamp_rmin(sys: SystemParams, rmin: Array) -> Array:
+    """Rates above the infinite-bandwidth asymptote g pmax/(N0 ln2) are
+    unattainable at any bandwidth; clamp with margin (deadline soft-missed)."""
+    asym = sys.gain * sys.p_max / (sys.noise_psd * jnp.log(2.0))
+    return jnp.minimum(rmin, 0.95 * asym)
+
+
+def _b_min(sys: SystemParams, rmin: Array, iters: int = 56) -> Array:
+    """Smallest bandwidth at which G(pmax, B) >= rmin (G increasing in B)."""
+    from jax import lax
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ok = G(sys, jnp.full_like(rmin, sys.p_max), mid) >= rmin
+        return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+    lo0 = jnp.full_like(rmin, 1e-3)
+    hi0 = jnp.full_like(rmin, float(sys.bandwidth_total))
+    _, hi = lax.fori_loop(0, iters, body, (lo0, hi0))
+    return hi
+
+
+def _p_star(sys: SystemParams, beta: Array, rmin: Array, B: Array) -> Array:
+    """Optimal power for fixed B in SP2_v2 (A.16 clipped to box & rate)."""
+    N0, g, d = sys.noise_psd, sys.gain, sys.bits
+    lam0 = beta * g / (N0 * d * jnp.log(2.0))
+    p_int = jnp.maximum(lam0 - 1.0, 0.0) * N0 * B / g
+    theta_req = jnp.exp2(rmin / jnp.maximum(B, 1e-9)) - 1.0
+    p_rate = theta_req * N0 * B / g
+    return jnp.clip(p_int, jnp.maximum(sys.p_min, p_rate), sys.p_max)
+
+
+def _h(sys: SystemParams, nu: Array, beta: Array, rmin: Array, B: Array) -> Array:
+    """Per-device SP2_v2 objective h_n(B) after minimizing over p."""
+    p = _p_star(sys, beta, rmin, B)
+    return nu * (p * sys.bits - beta * G(sys, p, B))
+
+
+def _golden_argmin(fn, lo: Array, hi: Array, iters: int = 56) -> Array:
+    from jax import lax
+
+    def body(_, carry):
+        a, b = carry
+        c = b - _GOLD * (b - a)
+        d = a + _GOLD * (b - a)
+        left = fn(c) < fn(d)
+        return jnp.where(left, a, c), jnp.where(left, d, b)
+
+    a, b = lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (a + b)
+
+
+@jax.jit
+def _sp2_v2_impl(sys: SystemParams, nu: Array, beta: Array,
+                 rmin: Array) -> Tuple[Array, Array]:
+    from jax import lax
+
+    rmin = _clamp_rmin(sys, rmin)
+    b_lo = _b_min(sys, rmin)
+    # if the rate floors alone exceed the budget the deadline is infeasible;
+    # scale them to fit (best effort) so the dual search terminates.
+    fit = jnp.minimum(1.0, 0.999 * sys.bandwidth_total / jnp.maximum(jnp.sum(b_lo), 1e-30))
+    b_lo = b_lo * fit
+    b_hi = jnp.maximum(jnp.full_like(b_lo, float(sys.bandwidth_total)), b_lo)
+
+    def B_of_mu(mu):
+        return _golden_argmin(
+            lambda B: _h(sys, nu, beta, rmin, B) + mu * B, b_lo, b_hi)
+
+    def sum_B(mu):
+        return jnp.sum(B_of_mu(mu))
+
+    # h is strictly decreasing => the cap binds; find the multiplier mu (A.15).
+    def expand(carry):
+        mu_hi, _, i = carry
+        return mu_hi * 8.0, sum_B(mu_hi * 8.0), i + 1
+
+    def expand_cond(carry):
+        mu_hi, s, i = carry
+        return (s >= sys.bandwidth_total) & (i < 200)
+
+    mu_hi0 = jnp.asarray(1e-12)
+    mu_hi, _, _ = lax.while_loop(expand_cond, expand,
+                                 (mu_hi0, sum_B(mu_hi0), jnp.asarray(0)))
+
+    def bis(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = sum_B(mid) > sys.bandwidth_total
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    mu_lo, mu_hi = lax.fori_loop(0, 56, bis, (jnp.asarray(0.0), mu_hi))
+    B_opt = B_of_mu(mu_hi)  # the feasible end of the bracket
+
+    # exact budget: scale surplus above the rate floors
+    total = jnp.sum(B_opt)
+    surplus = jnp.maximum(B_opt - b_lo, 0.0)
+    need = total - sys.bandwidth_total
+    scale = 1.0 - need / jnp.maximum(jnp.sum(surplus), 1e-30)
+    B_shrunk = b_lo + surplus * jnp.clip(scale, 0.0, 1.0)
+    B_opt = jnp.where(total > sys.bandwidth_total, B_shrunk,
+                      B_opt * (sys.bandwidth_total / jnp.maximum(total, 1e-30)))
+    p_opt = _p_star(sys, beta, rmin, B_opt)
+    return p_opt, B_opt
+
+
+def solve_sp2_v2(sys: SystemParams, w: Weights, nu: Array, beta: Array,
+                 rmin: Array) -> Tuple[Array, Array]:
+    """Exact solve of SP2_v2 via separable waterfilling. -> (p, B)."""
+    return _sp2_v2_impl(sys, nu, beta, rmin)
+
+
+# ----------------------------------------------------------------------------
+# Beyond-paper: exact direct solve of SP2 (DESIGN.md §5, EXPERIMENTS.md §Perf)
+#
+# Because the per-device energy E(p) = p d / G(p, B) is strictly increasing in
+# p, the optimal power always sits on the boundary: p* = max(pmin, p_rate(B)).
+# Substituting it, E_n(B) = max(E_rate(B), E_pmin(B)) is the max of two convex
+# decreasing functions, hence convex — SP2 collapses to a separable convex
+# program over B with one budget constraint, solved EXACTLY by waterfilling.
+# This yields the global optimum of SP2 directly (no parametric outer loop)
+# and doubles as a correctness oracle for the paper-faithful Algorithm 1.
+# ----------------------------------------------------------------------------
+
+def _p_rate(sys: SystemParams, rmin: Array, B: Array) -> Array:
+    """Power that makes the rate constraint tight at bandwidth B."""
+    theta_req = jnp.exp2(rmin / jnp.maximum(B, 1e-9)) - 1.0
+    return theta_req * sys.noise_psd * B / sys.gain
+
+
+def _energy_of_B(sys: SystemParams, rmin: Array, B: Array) -> Array:
+    """E_n(B) = p*(B) d / G(p*(B), B) with p* = max(pmin, p_rate(B))."""
+    p = jnp.clip(_p_rate(sys, rmin, B), sys.p_min, sys.p_max)
+    return p * sys.bits / jnp.maximum(G(sys, p, B), 1e-12)
+
+
+@jax.jit
+def _sp2_direct_impl(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
+    from jax import lax
+
+    rmin = _clamp_rmin(sys, rmin)
+    b_lo = _b_min(sys, rmin)
+    fit = jnp.minimum(1.0, 0.999 * sys.bandwidth_total / jnp.maximum(jnp.sum(b_lo), 1e-30))
+    b_lo = b_lo * fit          # infeasible deadline -> best-effort floors
+    b_hi = jnp.maximum(jnp.full_like(b_lo, float(sys.bandwidth_total)), b_lo)
+
+    def B_of_mu(mu):
+        return _golden_argmin(
+            lambda B: _energy_of_B(sys, rmin, B) + mu * B, b_lo, b_hi)
+
+    def sum_B(mu):
+        return jnp.sum(B_of_mu(mu))
+
+    mu_hi0 = jnp.asarray(1e-18)
+    mu_hi, _, _ = lax.while_loop(lambda c: (c[1] >= sys.bandwidth_total) & (c[2] < 200),
+                                 lambda c: (c[0] * 8.0, sum_B(c[0] * 8.0), c[2] + 1),
+                                 (mu_hi0, sum_B(mu_hi0), jnp.asarray(0)))
+
+    def bis(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = sum_B(mid) > sys.bandwidth_total
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    _, mu = lax.fori_loop(0, 56, bis, (jnp.asarray(0.0), mu_hi))
+    B_opt = B_of_mu(mu)
+
+    total = jnp.sum(B_opt)
+    surplus = jnp.maximum(B_opt - b_lo, 0.0)
+    scale = 1.0 - (total - sys.bandwidth_total) / jnp.maximum(jnp.sum(surplus), 1e-30)
+    B_opt = jnp.where(total > sys.bandwidth_total,
+                      b_lo + surplus * jnp.clip(scale, 0.0, 1.0), B_opt)
+    p_opt = jnp.clip(_p_rate(sys, rmin, B_opt), sys.p_min, sys.p_max)
+    return p_opt, B_opt
+
+
+def solve_sp2_direct(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
+    """Globally exact SP2 solve via the boundary-power reformulation."""
+    return _sp2_direct_impl(sys, rmin)
+
+
+def solve_sp2_v2_thm2(sys: SystemParams, w: Weights, nu: Array, beta: Array,
+                      rmin: Array) -> Tuple[Array, Array]:
+    """Paper-literal Appendix-D path: Lambert-W dual (A.22/A.23) + Theorem 2.
+    Exact when every device's rate constraint is tight (tau_n > 0)."""
+    rmin = _clamp_rmin(sys, rmin)
+    g_lin, d, N0 = sys.gain, sys.bits, sys.noise_psd
+    j = nu * d * N0 / g_lin
+
+    def gprime(mu):
+        wv = lambertw0((mu - j) / (jnp.e * j))
+        return jnp.sum(rmin * jnp.log(2.0) / jnp.maximum(wv + 1.0, 1e-12)) \
+            - sys.bandwidth_total
+
+    mu_lo, mu_hi = jnp.asarray(1e-30), jnp.asarray(float(jnp.max(j)) * 2.0 + 1.0)
+    for _ in range(200):
+        if float(gprime(mu_hi)) < 0.0:
+            break
+        mu_hi = mu_hi * 4.0
+    for _ in range(96):
+        mid = 0.5 * (mu_lo + mu_hi)
+        if float(gprime(mid)) > 0.0:
+            mu_lo = mid
+        else:
+            mu_hi = mid
+    mu = 0.5 * (mu_lo + mu_hi)
+
+    W = lambertw0((mu - j) / (jnp.e * j))
+    a_val = jnp.where(jnp.abs(W) > 1e-12,
+                      (mu - j) * jnp.log(2.0) / jnp.where(jnp.abs(W) < 1e-12, 1.0, W),
+                      jnp.e * j * jnp.log(2.0))          # (A.22) numerator
+    tau = jnp.maximum(a_val - nu * beta, 0.0)
+    a = nu * beta + tau
+    Lam = jnp.maximum(a * g_lin / (N0 * d * nu * jnp.log(2.0)), 1.0 + 1e-12)
+    B_opt = rmin / jnp.log2(Lam)                         # Theorem 2, tight branch
+    total = float(jnp.sum(B_opt))
+    if total > sys.bandwidth_total:
+        B_opt = B_opt * sys.bandwidth_total / total
+    p_opt = jnp.clip((Lam - 1.0) * N0 * B_opt / g_lin, sys.p_min, sys.p_max)
+    return p_opt, B_opt
+
+
+# ----------------------------------------------------------------------------
+# Outer Newton-like iteration (Algorithm 1)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SP2Result:
+    power: Array
+    bandwidth: Array
+    nu: Array
+    beta: Array
+    iters: int
+    residual: float
+
+
+def _phi_norm(sys: SystemParams, w: Weights, p, B, beta, nu) -> float:
+    rate_ = G(sys, p, B)
+    phi1 = -p * sys.bits + beta * rate_            # eq. (24)
+    phi2 = -w.w1 * sys.global_rounds + nu * rate_  # eq. (25)
+    return float(jnp.linalg.norm(jnp.concatenate([phi1, phi2])))
+
+
+def solve_sp2(sys: SystemParams, w: Weights, rmin: Array,
+              p0: Array, B0: Array,
+              max_iters: int = 30, xi: float = 0.5, eps: float = 0.01,
+              tol: float = 1e-9, damping: float = 0.5) -> SP2Result:
+    """Algorithm 1: Newton-like update of (beta, nu) around the SP2_v2 solver.
+
+    `damping` relaxes the (p, B) iterates between outer steps. SP2_v2's argmin
+    is non-unique in the slack-rate regime (near-linear tails of h_n), which
+    makes the undamped fixed point oscillate between vertex allocations; a
+    0.5 relaxation restores convergence while preserving the fixed points.
+    The globally exact `solve_sp2_direct` is used as the oracle in tests.
+    """
+    p, B = p0, B0
+    rate_ = jnp.maximum(G(sys, p, B), 1e-9)
+    nu = w.w1 * sys.global_rounds / rate_          # step 2
+    beta = p * sys.bits / rate_
+    it = 0
+    res = _phi_norm(sys, w, p, B, beta, nu)
+    scale = float(jnp.linalg.norm(sys.bits * sys.p_max)) \
+        + w.w1 * sys.global_rounds * float(np.sqrt(sys.n))
+    for it in range(1, max_iters + 1):
+        p_new, B_new = solve_sp2_v2(sys, w, nu, beta, rmin)  # step 4 (exact convex solve)
+        p = damping * p + (1.0 - damping) * p_new
+        B = damping * B + (1.0 - damping) * B_new
+        rate_ = jnp.maximum(G(sys, p, B), 1e-9)
+        sigma1 = p * sys.bits / rate_ - beta          # eq. (29)
+        sigma2 = w.w1 * sys.global_rounds / rate_ - nu
+        # Algorithm 1 terminates when phi -> 0 at the freshly solved (p, B)
+        # (a full Newton step makes the post-update residual 0 by construction).
+        res = _phi_norm(sys, w, p, B, beta, nu)
+        if res <= tol * max(1.0, scale):
+            break
+        step = 1.0                                    # backtracking rule (28)
+        for _ in range(30):
+            cand = _phi_norm(sys, w, p, B, beta + step * sigma1, nu + step * sigma2)
+            if cand <= (1.0 - eps * step) * res:
+                break
+            step *= xi
+        beta = beta + step * sigma1                   # eq. (30)
+        nu = nu + step * sigma2
+    return SP2Result(power=p, bandwidth=B, nu=nu, beta=beta, iters=it, residual=res)

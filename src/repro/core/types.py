@@ -1,0 +1,135 @@
+"""Core datatypes for the FL-MAR resource-allocation system (paper §III).
+
+All quantities are SI: Hz, watts, joules, seconds, bits, CPU cycles.
+Vectors are length-N jnp arrays (one entry per MAR device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) * 1e-3
+
+
+# Paper §VII-A defaults.
+DEFAULTS = dict(
+    n_devices=50,
+    area_m=500.0,             # devices uniform in a 500m x 500m square, BS at center
+    bandwidth_total=20e6,     # B  (Hz)
+    noise_psd=dbm_to_watt(-174.0),   # N0 (W/Hz)
+    p_max=dbm_to_watt(12.0),  # 12 dBm
+    p_min=dbm_to_watt(0.0),   # 0 dBm
+    f_max=2e9,                # 2 GHz
+    f_min=1e3,                # paper: 0 Hz; we use a tiny positive floor (see DESIGN.md)
+    kappa=1e-28,              # effective switched capacitance
+    cycles_lo=1e4,            # c_n ~ U[1,3]x1e4 cycles / standard sample
+    cycles_hi=3e4,
+    samples_per_device=500,   # D_n
+    upload_bits=28.1e3,       # d_n
+    local_iters=10,           # R_l
+    global_rounds=100,        # R_g
+    resolutions=(160.0, 320.0, 480.0, 640.0),   # s_bar_1..s_bar_M (pixels)
+    s_standard=160.0,
+    shadowing_db=8.0,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Static description of one FL-MAR system instance (N devices)."""
+    # per-device arrays, shape (N,)
+    gain: Array          # E[G_n] expected channel gain (linear)
+    cycles: Array        # c_n cycles per standard sample
+    samples: Array       # D_n
+    bits: Array          # d_n upload size in bits
+    # scalars
+    bandwidth_total: float
+    noise_psd: float
+    p_min: float
+    p_max: float
+    f_min: float
+    f_max: float
+    kappa: float
+    local_iters: float   # R_l
+    global_rounds: float # R_g
+    resolutions: tuple   # (s_bar_1..s_bar_M), ascending
+    s_standard: float
+
+    @property
+    def n(self) -> int:
+        return int(self.gain.shape[0])
+
+    @property
+    def zeta(self) -> float:
+        # zeta = 1 / s_standard^2  (paper eq. 7)
+        return 1.0 / (self.s_standard ** 2)
+
+    @property
+    def s_lo(self) -> float:
+        return float(self.resolutions[0])
+
+    @property
+    def s_hi(self) -> float:
+        return float(self.resolutions[-1])
+
+    def replace(self, **kw) -> "SystemParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Weights:
+    """Objective weights (paper eq. 12). w1 + w2 is normalized to 1."""
+    w1: float
+    w2: float
+    rho: float
+
+    def normalized(self) -> "Weights":
+        s = self.w1 + self.w2
+        if s <= 0:
+            raise ValueError("w1 + w2 must be positive (paper §VII-A footnote)")
+        return Weights(self.w1 / s, self.w2 / s, self.rho / s)
+
+
+@dataclasses.dataclass
+class Allocation:
+    """A resource allocation decision: per-device arrays of shape (N,)."""
+    bandwidth: Array   # B_n (Hz)
+    power: Array       # p_n (W)
+    freq: Array        # f_n (Hz)
+    resolution: Array  # s_n (pixels), one of the discrete choices
+    s_relaxed: Optional[Array] = None  # continuous \hat{s} before rounding
+    T: Optional[Array] = None          # per-round makespan auxiliary variable
+
+    def astuple(self):
+        return (self.bandwidth, self.power, self.freq, self.resolution)
+
+    def flat(self) -> Array:
+        return jnp.concatenate([jnp.asarray(x).ravel() for x in self.astuple()])
+
+
+jax.tree_util.register_pytree_node(
+    Allocation,
+    lambda a: ((a.bandwidth, a.power, a.freq, a.resolution, a.s_relaxed, a.T), None),
+    lambda _, c: Allocation(*c),
+)
+
+_SYS_SCALARS = ("bandwidth_total", "noise_psd", "p_min", "p_max", "f_min",
+                "f_max", "kappa", "local_iters", "global_rounds",
+                "resolutions", "s_standard")
+_SYS_ARRAYS = ("gain", "cycles", "samples", "bits")
+
+jax.tree_util.register_pytree_node(
+    SystemParams,
+    lambda s: (tuple(getattr(s, k) for k in _SYS_ARRAYS),
+               tuple(getattr(s, k) for k in _SYS_SCALARS)),
+    lambda aux, leaves: SystemParams(**dict(zip(_SYS_ARRAYS, leaves)),
+                                     **dict(zip(_SYS_SCALARS, aux))),
+)

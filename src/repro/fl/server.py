@@ -1,0 +1,79 @@
+"""FedAvg server (paper §III): weighted parameter averaging across clients.
+
+`run_federated` is the reference single-host loop. For datacenter-scale
+federated *simulation* the same aggregation is expressed as a weighted psum
+over the mesh 'data' axis in `repro.launch.train` (clients sharded across
+devices) — the aggregation math here is the oracle for that path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.client import local_train
+from repro.fl.data import FLDataset, make_eval_set, render
+from repro.models.cnn import accuracy as eval_accuracy
+from repro.models.cnn import init_cnn
+
+Params = dict
+
+
+def fedavg(params_list: Sequence[Params], weights: jax.Array) -> Params:
+    """w_global = sum_n (D_n / D) w_n   (the paper's global model, §III)."""
+    wn = weights / jnp.sum(weights)
+
+    def avg(*leaves):
+        return sum(w * leaf for w, leaf in zip(wn, leaves))
+
+    return jax.tree_util.tree_map(avg, *params_list)
+
+
+@dataclasses.dataclass
+class FLRunResult:
+    params: Params
+    round_accuracy: List[float]
+    round_loss: List[float]
+
+
+def run_federated(key: jax.Array, ds: FLDataset,
+                  resolutions: Sequence[int],
+                  global_rounds: int = 20, local_iters: int = 10,
+                  lr: float = 0.05,
+                  eval_every: int = 1, eval_n: int = 512,
+                  eval_resolution: Optional[int] = None) -> FLRunResult:
+    """FedAvg over `ds` with per-client frame resolutions from the allocator.
+
+    resolutions: one rendering resolution per client (the allocator's s_n,
+    mapped onto the dataset's resolution grid by the simulator).
+    """
+    k_init, k_eval = jax.random.split(key)
+    params = init_cnn(k_init, num_classes=ds.num_classes)
+    ev_imgs, ev_labels = make_eval_set(k_eval, ds, n=eval_n)
+    # MAR deployment serves at the frame resolution the fleet runs at: eval at
+    # the median allocated resolution unless overridden.
+    ev_res = eval_resolution or int(sorted(resolutions)[len(resolutions) // 2])
+    ev_imgs = render(ev_imgs, ev_res)
+
+    # pre-render each client's shard at its allocated resolution
+    client_data = [
+        (render(ds.images[i], int(resolutions[i])), ds.labels[i])
+        for i in range(ds.n_clients)
+    ]
+    sizes = jnp.asarray([float(ds.labels.shape[1])] * ds.n_clients)
+
+    accs: List[float] = []
+    losses: List[float] = []
+    for r in range(global_rounds):
+        updated, round_losses = [], []
+        for i, (imgs, labels) in enumerate(client_data):
+            p_i, loss_i = local_train(params, imgs, labels, lr, local_iters)
+            updated.append(p_i)
+            round_losses.append(float(loss_i))
+        params = fedavg(updated, sizes)
+        losses.append(sum(round_losses) / len(round_losses))
+        if (r + 1) % eval_every == 0:
+            accs.append(float(eval_accuracy(params, ev_imgs, ev_labels)))
+    return FLRunResult(params=params, round_accuracy=accs, round_loss=losses)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot spots + jit wrappers (ops) and
+pure-jnp oracles (ref)."""

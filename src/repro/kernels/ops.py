@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced JAX ops, validating the exact code that compiles for TPU.
+On TPU backends they compile natively. `REPRO_FORCE_INTERPRET=1` forces
+interpret mode everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
+from repro.kernels.waterfill import waterfill_gprime as _waterfill
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 64):
+    return _rwkv(r, k, v, logw, u, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def mamba_scan(dt, A, Bt, Ct, x, *, chunk: int = 64, block_d: int = 256):
+    return _mamba(dt, A, Bt, Ct, x, chunk=chunk, block_d=block_d,
+                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("B_total", "block_n"))
+def waterfill_gprime(mu, j, rmin, B_total: float, *, block_n: int = 1024):
+    return _waterfill(mu, j, rmin, B_total, block_n=block_n,
+                      interpret=_interpret())

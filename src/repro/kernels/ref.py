@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,S,hd); k,v: (B,KV,T,*). Plain masked softmax attention."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kh = jnp.repeat(k, G, axis=1)      # (B,H,T,hd)
+    vh = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vh.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+              u: jax.Array, s0: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential WKV6 recurrence (the definitional form).
+    r,k,v,logw: (B,L,H,K) f32; u: (H,K). Returns (o (B,L,H,K), s_L (B,H,K,K)).
+        o_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, L, H, K = r.shape
+    r, k, v, logw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+    S = jnp.zeros((B, H, K, K), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S) \
+            + jnp.einsum("bhk,bhv->bhv", rt * u[None] * kt, vt)
+        S = jnp.exp(lwt)[..., None] * S + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S, o
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, logw))
+    S_end, os = jax.lax.scan(step, S, xs)
+    return os.transpose(1, 0, 2, 3), S_end
+
+
+def mamba_scan_ref(dt: jax.Array, A: jax.Array, Bt: jax.Array, Ct: jax.Array,
+                   x: jax.Array, h0: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential selective-scan recurrence.
+    dt, x: (B,L,D); A: (D,N); Bt, Ct: (B,L,N). Returns (y (B,L,D), h_L (B,D,N)).
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;   y_t = h_t . C_t
+    """
+    Bsz, L, D = x.shape
+    N = A.shape[1]
+    dt, Bt, Ct, x = (t.astype(jnp.float32) for t in (dt, Bt, Ct, x))
+    A = A.astype(jnp.float32)
+    h = jnp.zeros((Bsz, D, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        dtt, bt, ct, xt = inp
+        a = jnp.exp(dtt[..., None] * A)                     # (B,D,N)
+        h = a * h + dtt[..., None] * bt[:, None, :] * xt[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), Bt.transpose(1, 0, 2),
+          Ct.transpose(1, 0, 2), x.transpose(1, 0, 2))
+    h_end, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2), h_end
+
+
+def waterfill_gprime_ref(mu: jax.Array, j: jax.Array, rmin: jax.Array,
+                         B_total: float) -> jax.Array:
+    """g'(mu) for each candidate mu (the SP2 dual derivative, eq. A.23):
+    mu: (M,); j, rmin: (N,). Returns (M,)."""
+    from repro.core.lambertw import lambertw0
+
+    z = (mu[:, None] - j[None, :]) / (jnp.e * j[None, :])
+    w = lambertw0(z)
+    return jnp.sum(rmin[None, :] * jnp.log(2.0)
+                   / jnp.maximum(w + 1.0, 1e-12), axis=1) - B_total

@@ -1,0 +1,94 @@
+"""RWKV6 (Finch) chunked WKV Pallas TPU kernel.
+
+Grid (B, H, T/L) — sequential over chunks on TPU, the (K,V) recurrent state
+living in VMEM scratch across chunk steps. Within a chunk the recurrence is
+evaluated in parallel form with log-space pairwise decays
+exp(clw_{t-1} - clw_tau) (tau < t), which never overflow because the exponent
+is always <= 0. head_dim-sized tiles keep the MXU busy ((L,K)x(K,K) dots).
+
+Oracle: kernels.ref.rwkv6_ref (sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+                chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)     # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)          # (K,)
+    S0 = s_scr[...]                           # (K, V)
+
+    clw = jnp.cumsum(lw, axis=0)              # inclusive (L, K)
+    clw_prev = clw - lw                       # exclusive
+
+    # o_init = (r * exp(clw_prev)) @ S0
+    o = jax.lax.dot_general(r * jnp.exp(clw_prev), S0,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk: sum_{tau<t} (r_t * exp(clw_prev_t - clw_tau) . k_tau) v_tau
+    L = r.shape[0]
+    decay = clw_prev[:, None, :] - clw[None, :, :]          # (t, tau, K)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    fac = jnp.where(tri[..., None], jnp.exp(decay), 0.0)    # (t, tau, K)
+    att = jnp.einsum("tk,tsk,sk->ts", r, fac, k)            # (t, tau)
+    o = o + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # bonus diagonal: o_t += (sum_i r_i u_i k_i) * v_t
+    o = o + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+
+    # state update: S_L = exp(clw_L) * S0 + sum_tau exp(clw_L - clw_tau) k_tau v_tau
+    wL = jnp.exp(clw[-1])[:, None]                          # (K,1)
+    kfac = jnp.exp(clw[-1][None, :] - clw) * k              # (L,K)
+    s_scr[...] = wL * S0 + jax.lax.dot_general(
+        kfac, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+               u: jax.Array, *, chunk: int = 64,
+               interpret: bool = False) -> jax.Array:
+    """r,k,v,logw: (B, T, H, K); u: (H, K). T % chunk == 0. -> o (B,T,H,K)."""
+    B, T, H, K = r.shape
+    assert T % chunk == 0
+    n_chunks = T // chunk
+    # (B, H, T, K) layout for blocking
+    rr, kk, vv, lw = (t.transpose(0, 2, 1, 3) for t in (r, k, v, logw))
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, K), lambda b, h, j: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, K), lambda b, h, j: (b, h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, K), jnp.float32),
+        scratch_shapes=[_vmem((K, K))],
+        interpret=interpret,
+    )(rr, kk, vv, lw, u)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,76 @@
+"""Metaverse-scale allocator kernel: batched SP2 dual sweep (paper eq. A.23).
+
+Evaluates g'(mu) for M candidate multipliers over N devices in one pass —
+the inner loop of the bandwidth waterfilling at fleet scale (N ~ 10^5..10^6
+AR clients per base-station region). Grid (N/bn,), VMEM block of device
+parameters, Lambert-W by Halley iteration on VREGs, partial sums accumulated
+into the (M,) output across sequential grid steps.
+
+Oracle: kernels.ref.waterfill_gprime_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lambertw_vec(z, iters: int = 24):
+    zc = jnp.maximum(z, -0.36787944117144233)
+    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * zc + 1.0), 0.0))
+    w_branch = -1.0 + p - p * p / 3.0 + 11.0 * p ** 3 / 72.0
+    lz = jnp.log(jnp.maximum(zc, 1e-300))
+    llz = jnp.log(jnp.maximum(lz, 1e-300))
+    w_big = lz - llz + llz / jnp.maximum(lz, 1e-12)
+    w_small = zc * (1.0 - zc + 1.5 * zc * zc)
+    w = jnp.where(zc < -0.25, w_branch, jnp.where(zc > 3.0, w_big, w_small))
+    w = jnp.maximum(w, -1.0 + 1e-12)
+    for _ in range(iters):
+        ew = jnp.exp(w)
+        f = w * ew - zc
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
+        w = jnp.maximum(w - f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom),
+                        -1.0 + 1e-15)
+    return w
+
+
+def _waterfill_kernel(mu_ref, j_ref, rmin_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mu = mu_ref[...].astype(jnp.float32)       # (M,)
+    j = j_ref[...].astype(jnp.float32)         # (bn,)
+    rmin = rmin_ref[...].astype(jnp.float32)   # (bn,)
+    z = (mu[:, None] - j[None, :]) / (jnp.e * j[None, :])   # (M, bn)
+    w = _lambertw_vec(z)
+    part = jnp.sum(rmin[None, :] * jnp.log(2.0)
+                   / jnp.maximum(w + 1.0, 1e-12), axis=1)   # (M,)
+    out_ref[...] += part
+
+
+def waterfill_gprime(mu: jax.Array, j: jax.Array, rmin: jax.Array,
+                     B_total: float, *, block_n: int = 1024,
+                     interpret: bool = False) -> jax.Array:
+    """g'(mu) per candidate: mu (M,), j/rmin (N,) -> (M,). N % block_n == 0."""
+    N = j.shape[0]
+    assert N % block_n == 0, (N, block_n)
+    M = mu.shape[0]
+    sums = pl.pallas_call(
+        _waterfill_kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((M,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((M,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        interpret=interpret,
+    )(mu.astype(jnp.float32), j.astype(jnp.float32), rmin.astype(jnp.float32))
+    return sums - B_total

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init, and the dry-run needs 512 placeholder host devices to
+# build the production meshes.  (Tests/benches must NOT import this module.)
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+# production meshes, print memory/cost analyses, and dump roofline inputs.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.specs import SHAPES, adapt_config, batch_specs, decode_cache_len, supported
+from repro.launch.steps import make_serve_step, make_train_step, make_prefill_step
+from repro.models.transformer import init_cache, init_model
+from repro.optim import AdamW, AdamWState
+from repro.sharding.partition import (fsdp_tp_rules, param_pspecs,
+                                      param_shardings, use_rules)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _result_bytes(shape_str: str) -> int:
+    """Bytes of an HLO result type like 'bf16[16,128,512]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device result bytes of every collective op in post-SPMD HLO."""
+    out = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\S+) ([\w\-]+)", ls)
+        if not m:
+            continue
+        opname = m.group(2)
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname.startswith(op + "-"):
+                b = _result_bytes(m.group(1))
+                out[op]["count"] += 1
+                out[op]["bytes"] += b
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _batch_shardings(specs: Dict[str, Any], mesh, multi_pod: bool):
+    data = ("pod", "data") if multi_pod else ("data",)
+    out = {}
+    for k, v in specs.items():
+        if k == "pos" or v.shape == ():
+            out[k] = NamedSharding(mesh, P())
+        elif v.shape[0] == 1:       # batch=1 (long_500k): replicate
+            out[k] = NamedSharding(mesh, P(*([None] * len(v.shape))))
+        else:
+            out[k] = NamedSharding(mesh, P(data, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               rules_override: Optional[dict] = None,
+               cfg_overrides: Optional[dict] = None,
+               accum_steps: int = 1,
+               verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) and return the roofline record."""
+    t0 = time.time()
+    cfg = adapt_config(get_config(arch), shape_name)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = fsdp_tp_rules(multi_pod, seq_shard_decode=(kind == "decode"))
+    if rules_override:
+        rules.update(rules_override)
+
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda k: init_model(k, cfg), key)
+    psh = param_shardings(params_abs, mesh, rules)
+
+    specs = batch_specs(cfg, shape_name)
+    bsh = _batch_shardings(specs, mesh, multi_pod)
+
+    with mesh, use_rules(rules, mesh_axis_sizes(mesh)):
+        if kind == "train":
+            step, opt = make_train_step(cfg, accum_steps=accum_steps)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            osh = AdamWState(step=NamedSharding(mesh, P()), mu=psh, nu=psh)
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(psh, bsh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            step = make_serve_step(cfg)
+            B = sh["batch"]
+            slots = decode_cache_len(cfg, shape_name)
+            cache_abs = jax.eval_shape(
+                lambda: init_cache(cfg, B, slots))
+            csh = param_shardings(cache_abs, mesh, rules)
+            extras = {k: v for k, v in specs.items()
+                      if k in ("frame_embeds", "enc_out")}
+            esh = {k: bsh[k] for k in extras} or None
+            args = (params_abs, cache_abs, specs["token"], specs["pos"])
+            in_sh = (psh, csh, bsh["token"], bsh["pos"])
+            if extras:
+                jitted = jax.jit(step, in_shardings=in_sh + (esh,),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(*args, extras)
+            else:
+                jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+                lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    record = dict(
+        arch=arch, shape=shape_name, kind=kind,
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_devices=int(mesh.devices.size),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        peak_bytes=int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+        collectives=coll,
+    )
+    if verbose:
+        print(f"== {arch} x {shape_name} on {record['mesh']} "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"   memory: args={record['argument_bytes']/2**30:.2f}GiB "
+              f"out={record['output_bytes']/2**30:.2f}GiB "
+              f"temp={record['temp_bytes']/2**30:.2f}GiB")
+        print(f"   cost: flops={record['flops']:.3e} "
+              f"bytes={record['hbm_bytes']:.3e}")
+        print(f"   collectives: {coll['total_bytes']/2**20:.1f} MiB "
+              + " ".join(f"{op}:{coll[op]['count']}" for op in COLLECTIVE_OPS
+                         if coll[op]["count"]))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    ok = skipped = failed = 0
+    for a, s, mp in pairs:
+        if not supported(get_config(a), s):
+            print(f"-- skip {a} x {s} (documented skip, DESIGN.md §4)")
+            skipped += 1
+            continue
+        try:
+            rec = lower_pair(a, s, mp)
+            ok += 1
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        except Exception as e:
+            failed += 1
+            print(f"!! FAIL {a} x {s} multi_pod={mp}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+    print(f"\ndry-run summary: {ok} ok, {skipped} skipped, {failed} failed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

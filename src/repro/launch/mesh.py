@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+make_production_mesh is a FUNCTION (module import never touches jax device
+state).  Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods,
+512 chips as (pod=2, data=16, model=16); the 'pod' axis extends data
+parallelism across the inter-pod links (DCN in practice).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on the host CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,84 @@
+"""Input specs for every (architecture x input-shape) pair: weak-type-correct
+ShapeDtypeStructs — shardable stand-ins, no device allocation.
+
+INPUT SHAPES (assignment):
+    train_4k     seq=4096    global_batch=256   (training)
+    prefill_32k  seq=32768   global_batch=32    (inference prefill)
+    decode_32k   seq=32768   global_batch=128   (decode: 1 token + 32k cache)
+    long_500k    seq=524288  global_batch=1     (long-context decode)
+
+Decode shapes lower `serve_step` (single token + cache); `long_500k` requires
+sub-quadratic attention — dense archs run it with the sliding-window variant
+(config flag), whisper skips it (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SHAPES: Dict[str, dict] = {
+    "train_4k":    dict(kind="train",   seq=4096,    batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,   batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,   batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288,  batch=1),
+}
+
+LONG_WINDOW = 4096          # sliding window used for the long_500k variant
+
+
+def adapt_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Shape-specific config adjustments (documented in DESIGN.md §4):
+    long_500k forces a sliding-window attention variant on dense archs."""
+    if shape_name == "long_500k":
+        if cfg.arch_type == "audio":
+            raise ValueError(
+                "whisper-large-v3 skips long_500k: enc-dec full attention has "
+                "no meaningful 500k sliding-window decode (DESIGN.md §4)")
+        if cfg.attention != "none" and cfg.sliding_window is None:
+            cfg = cfg.replace(sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape_name: str) -> bool:
+    return not (shape_name == "long_500k" and cfg.arch_type == "audio")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the model inputs of this shape."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if sh["kind"] in ("train", "prefill"):
+        text = S
+        out: Dict[str, Any] = {}
+        if cfg.n_patches:
+            text = S - cfg.n_patches
+            out["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder_layers:
+            out["frame_embeds"] = _sds((B, cfg.encoder_ctx, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = _sds((B, text), jnp.int32)
+        return out
+    # decode: one token + absolute position (+ encoder frames for enc-dec)
+    out = {"token": _sds((B,), jnp.int32), "pos": _sds((), jnp.int32)}
+    if cfg.encoder_layers:
+        if cfg.cross_kv_cache:
+            # optimized path: encoder ran once at admission; decode only needs
+            # enc_out for nothing — cross K/V live in the cache. (enc_out kept
+            # out of the step entirely.)
+            pass
+        else:
+            out["frame_embeds"] = _sds((B, cfg.encoder_ctx, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_cache_len(cfg: ModelConfig, shape_name: str) -> int:
+    S = SHAPES[shape_name]["seq"]
+    return min(cfg.sliding_window, S) if cfg.sliding_window else S

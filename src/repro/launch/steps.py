@@ -1,0 +1,65 @@
+"""Jittable step functions (train / prefill / serve) shared by the real
+drivers and the multi-pod dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import lm_loss, model_forward, serve_step
+from repro.optim import AdamW, clip_by_global_norm
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[AdamW] = None,
+                    clip: float = 1.0, accum_steps: int = 1):
+    """accum_steps > 1 splits the global batch into microbatches scanned
+    inside one jit step (gradient accumulation): live activations shrink by
+    the accumulation factor at the cost of re-gathering FSDP shards per
+    microbatch (§Perf memory lever for the MoE trains)."""
+    opt = optimizer or AdamW(lr=3e-4)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch)
+        else:
+            def split(x):
+                a = accum_steps
+                return x.reshape((a, x.shape[0] // a) + x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(lm_loss)(params, cfg, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.asarray(0.0, jnp.float32), g0), micro)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _, _ = model_forward(params, cfg, batch, mode="prefill")
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def _serve(params, cache, token, pos, extras=None):
+        return serve_step(params, cfg, cache, token, pos, extras)
+
+    return _serve

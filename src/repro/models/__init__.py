@@ -1,0 +1,1 @@
+from repro.models.cnn import accuracy, apply_cnn, init_cnn, xent_loss

@@ -1,0 +1,417 @@
+"""Attention: MHA / GQA / MQA (+ QKV bias), sliding-window, MLA, cross-attn,
+with full or ring-buffer KV caches for decode.
+
+Conventions
+-----------
+x: (B, S, D).  q heads H, kv heads KV (H % KV == 0), head_dim hd.
+RoPE is applied BEFORE caching, so ring-buffer (sliding-window) caches stay
+valid regardless of slot order. Softmax in float32.
+
+Decode: one new token per call (S == 1), `pos` is the current absolute
+position (same for the whole batch — batched continuous decode).
+Sliding-window layers keep only `window` KV slots (ring buffer), which is why
+`long_500k` decode is memory-feasible for SWA architectures (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.sharding.partition import shard
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, S_slots, KV, hd)   roped keys
+    v: jax.Array           # (B, S_slots, KV, hd)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array        # (B, S_slots, kv_lora_rank)
+    k_rope: jax.Array      # (B, S_slots, qk_rope_dim)  shared across heads
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(slot, head) scales: halves the decode-step
+    HBM traffic (the dominant roofline term for decode shapes, §Perf)."""
+    qk: jax.Array          # (B, S_slots, KV, hd) int8
+    qv: jax.Array          # (B, S_slots, KV, hd) int8
+    k_scale: jax.Array     # (B, S_slots, KV) f32
+    v_scale: jax.Array     # (B, S_slots, KV) f32
+
+
+def _quantize(x: jax.Array):
+    """x (B, 1, KV, hd) -> (int8, scale (B,1,KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+class CrossKV(NamedTuple):
+    """Precomputed cross-attention keys/values over the encoder output —
+    computed once at request admission instead of every decode step
+    (EXPERIMENTS.md §Perf, whisper decode hillclimb)."""
+    xk: jax.Array          # (B, enc_ctx, H, hd)
+    xv: jax.Array          # (B, enc_ctx, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int, kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    sd = (2.0 / (d_model + n_heads * head_dim)) ** 0.5
+    p = dict(
+        wq=(jax.random.normal(ks[0], (d_model, n_heads, head_dim)) * sd).astype(dtype),
+        wk=(jax.random.normal(ks[1], (d_model, kv_heads, head_dim)) * sd).astype(dtype),
+        wv=(jax.random.normal(ks[2], (d_model, kv_heads, head_dim)) * sd).astype(dtype),
+        wo=(jax.random.normal(ks[3], (n_heads, head_dim, d_model)) * sd).astype(dtype),
+    )
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((kv_heads, head_dim), dtype)
+    return p
+
+
+def init_mla(key: jax.Array, d_model: int, n_heads: int,
+             q_lora_rank: int, kv_lora_rank: int,
+             qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    qk_dim = qk_nope_dim + qk_rope_dim
+    sd = 0.02
+    return dict(
+        wq_a=(jax.random.normal(ks[0], (d_model, q_lora_rank)) * sd).astype(dtype),
+        wq_b=(jax.random.normal(ks[1], (q_lora_rank, n_heads, qk_dim)) * sd).astype(dtype),
+        wkv_a=(jax.random.normal(ks[2], (d_model, kv_lora_rank)) * sd).astype(dtype),
+        # decompression: kv_lora -> per-head (k_nope | v)
+        wkv_b=(jax.random.normal(ks[3], (kv_lora_rank, n_heads,
+                                         qk_nope_dim + v_head_dim)) * sd).astype(dtype),
+        wk_rope=(jax.random.normal(ks[4], (d_model, qk_rope_dim)) * sd).astype(dtype),
+        wo=(jax.random.normal(ks[5], (n_heads, v_head_dim, d_model)) * sd).astype(dtype),
+    )
+
+
+def init_kv_cache(batch: int, slots: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16, quantized: bool = False):
+    shp = (batch, slots, kv_heads, head_dim)
+    if quantized:
+        return QuantKVCache(qk=jnp.zeros(shp, jnp.int8),
+                            qv=jnp.zeros(shp, jnp.int8),
+                            k_scale=jnp.zeros(shp[:-1], jnp.float32),
+                            v_scale=jnp.zeros(shp[:-1], jnp.float32))
+    return KVCache(k=jnp.zeros(shp, dtype), v=jnp.zeros(shp, dtype))
+
+
+def make_cross_kv(p: dict, enc_out: jax.Array) -> CrossKV:
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    xk = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    xv = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if "bk" in p:
+        xk = xk + p["bk"]
+        xv = xv + p["bv"]
+    return CrossKV(xk=xk, xv=xv)
+
+
+def init_mla_cache(batch: int, slots: int, kv_lora_rank: int,
+                   qk_rope_dim: int, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(c_kv=jnp.zeros((batch, slots, kv_lora_rank), dtype),
+                    k_rope=jnp.zeros((batch, slots, qk_rope_dim), dtype))
+
+
+def _fill_cache(cache, k: jax.Array, v: jax.Array):
+    """Block prefill: write S roped K/V positions into the cache (positions
+    0..S-1). Ring caches keep the last `slots` positions at slot = pos % slots;
+    int8 caches quantize on write."""
+    quant = isinstance(cache, QuantKVCache)
+    slots = (cache.qk if quant else cache.k).shape[1]
+    S = k.shape[1]
+    if S >= slots:
+        keep = slice(S - slots, S)
+        pos = jnp.arange(S - slots, S)
+        kk, vv = k[:, keep], v[:, keep]
+    else:
+        pos = jnp.arange(S)
+        kk, vv = k, v
+    slot_idx = pos % slots
+    if quant:
+        qk, ks = _quantize(kk)
+        qv, vs = _quantize(vv)
+        return QuantKVCache(
+            qk=cache.qk.at[:, slot_idx].set(qk),
+            qv=cache.qv.at[:, slot_idx].set(qv),
+            k_scale=cache.k_scale.at[:, slot_idx].set(ks),
+            v_scale=cache.v_scale.at[:, slot_idx].set(vs))
+    return KVCache(k=cache.k.at[:, slot_idx].set(kk.astype(cache.k.dtype)),
+                   v=cache.v.at[:, slot_idx].set(vv.astype(cache.v.dtype)))
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _grouped_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q: (B,S,H,hd) k,v: (B,T,KV,*) -> (B,S,H,v_dim); mask (B,1,S,T) or None.
+    Used for decode (S==1): scores stay (B,KV,G,1,T), shardable over kv_seq."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        # keep the mask boolean until use: a hoisted f32 mask constant would
+        # cost 4x the memory as a scan-carried invariant
+        scores = jnp.where(mask[:, :, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, out.shape[-1])
+
+
+def _chunked_attn(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, window: Optional[int], scale: float,
+                  q_offset: int = 0, chunk: int = 512) -> jax.Array:
+    """Train/prefill attention without the (S,T) f32 blow-up: scan over query
+    chunks; kv heads are broadcast to H so scores (B,H,c,T) shard over 'heads'
+    (KV alone is often not divisible by the model axis). Under remat the
+    per-chunk scores are recomputed in the backward pass — flash-style memory
+    at XLA level (the Pallas kernel is the TPU hot path, kernels/flash).
+    q: (B,S,H,hd); k,v: (B,T,KV,*)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kh = jnp.broadcast_to(k[:, :, :, None], (B, T, KV, G, k.shape[-1]))
+    kh = kh.reshape(B, T, H, k.shape[-1])
+    vh = jnp.broadcast_to(v[:, :, :, None], (B, T, KV, G, v.shape[-1]))
+    vh = vh.reshape(B, T, H, v.shape[-1])
+    kh = shard(kh, "batch", "seq", "heads", "head_dim")
+    vh = shard(vh, "batch", "seq", "heads", "head_dim")
+
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // c
+    qc = q.reshape(B, n_chunks, c, H, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(T)
+
+    @jax.checkpoint
+    def chunk_attn(i, qi):
+        scores = jnp.einsum("bchd,bthd->bhct", qi, kh).astype(jnp.float32) * scale
+        scores = shard(scores, "batch", "heads", None, None)
+        if causal:
+            qpos = i * c + jnp.arange(c) + q_offset
+            ok = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(ok[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vh.dtype)
+        return jnp.einsum("bhct,bthd->bchd", probs, vh)
+
+    def body(i, qi):
+        # rematerialized per chunk: backward recomputes scores/probs instead of
+        # the scan saving an (S,T)-sized f32 per layer (flash-style memory)
+        return i + 1, chunk_attn(i, qi)
+
+    _, outs = jax.lax.scan(body, 0, qc)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * c, H, v.shape[-1])
+    return out[:, :S]
+
+
+def _causal_mask(S: int, T: int, q_offset: int = 0,
+                 window: Optional[int] = None) -> jax.Array:
+    """(1, 1, S, T) boolean: True = attend. T >= S; query i at abs pos q_offset+i."""
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    ok = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return ok[None, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attention(p: dict, x: jax.Array, *,
+              positions: Optional[jax.Array] = None,
+              mode: str = "train",
+              cache: Optional[KVCache] = None,
+              pos: Optional[jax.Array] = None,
+              window: Optional[int] = None,
+              causal: bool = True,
+              rope_theta: float = 10000.0,
+              kv_x: Optional[jax.Array] = None,
+              cross_kv: Optional["CrossKV"] = None,
+              use_rope: bool = True) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Returns (out (B,S,D), new_cache).
+
+    mode "train"/"prefill": full-sequence self-attention (cache ignored).
+    mode "decode": S==1; reads/writes `cache` at absolute position `pos`
+        (ring-buffered when `window` is set).
+    kv_x: cross-attention source (B, T, D); disables causality, rope, cache.
+    """
+    B, S, D = x.shape
+    H, hd = p["wq"].shape[1], p["wq"].shape[2]
+    scale = hd ** -0.5
+
+    if cross_kv is not None:              # precomputed cross-attention K/V
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"]
+        out = _grouped_attn(q, cross_kv.xk, cross_kv.xv, None, scale)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+
+    if kv_x is not None:                         # cross-attention
+        out = _chunked_attn(q, k, v, causal=False, window=None, scale=scale)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+    if mode in ("train", "prefill"):
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        out = _chunked_attn(q, k, v, causal=causal, window=window, scale=scale)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = _fill_cache(cache, k, v)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    # ---- decode -----------------------------------------------------------
+    assert S == 1 and cache is not None and pos is not None
+    if use_rope:
+        pv = jnp.full((B, 1), pos)
+        q = apply_rope(q, pv, rope_theta)
+        k = apply_rope(k, pv, rope_theta)
+    quant = isinstance(cache, QuantKVCache)
+    slots = (cache.qk if quant else cache.k).shape[1]
+    slot = pos % slots if window is not None else pos
+    if quant:
+        qk_new, ks_new = _quantize(k)
+        qv_new, vs_new = _quantize(v)
+        new_cache = QuantKVCache(
+            qk=jax.lax.dynamic_update_slice_in_dim(cache.qk, qk_new, slot, axis=1),
+            qv=jax.lax.dynamic_update_slice_in_dim(cache.qv, qv_new, slot, axis=1),
+            k_scale=jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks_new, slot, axis=1),
+            v_scale=jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs_new, slot, axis=1))
+        k_all = _dequantize(shard(new_cache.qk, "batch", "kv_seq", "kv_heads", "head_dim"),
+                            shard(new_cache.k_scale, "batch", "kv_seq", "kv_heads"), k.dtype)
+        v_all = _dequantize(shard(new_cache.qv, "batch", "kv_seq", "kv_heads", "head_dim"),
+                            shard(new_cache.v_scale, "batch", "kv_seq", "kv_heads"), v.dtype)
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+        new_cache = KVCache(k=new_k, v=new_v)
+        k_all = shard(new_cache.k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v_all = shard(new_cache.v, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    kpos_valid = jnp.arange(slots)
+    if window is not None:
+        valid = (kpos_valid <= pos % slots) | (pos >= slots)
+    else:
+        valid = kpos_valid <= pos
+    mask = valid[None, None, None, :]            # (1,1,1,slots)
+    out = _grouped_attn(q, k_all, v_all, mask, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (MiniCPM3-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_attention(p: dict, x: jax.Array, *,
+                  qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+                  mode: str = "train",
+                  cache: Optional[MLACache] = None,
+                  pos: Optional[jax.Array] = None,
+                  window: Optional[int] = None,
+                  rope_theta: float = 10000.0) -> Tuple[jax.Array, Optional[MLACache]]:
+    """Latent attention: KV state is the compressed c_kv (+ shared roped key).
+    The decode cache stores rank-r latents, not per-head K/V — the memory win
+    that defines MLA."""
+    B, S, D = x.shape
+    H = p["wq_b"].shape[1]
+    scale = (qk_nope_dim + qk_rope_dim) ** -0.5
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])          # latent
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["wk_rope"])      # shared rope key
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S)[None, :]
+        q_rope = apply_rope(q_rope, positions, rope_theta)
+        k_rope_r = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+        kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+        k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_r[:, :, None, :],
+                                      (B, S, H, qk_rope_dim))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _chunked_attn(qf, k, v, causal=True, window=window, scale=scale)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            slots = cache.c_kv.shape[1]
+            if S >= slots:
+                pos = jnp.arange(S - slots, S)
+                ck, kr = c_kv[:, S - slots:], k_rope_r[:, S - slots:]
+            else:
+                pos = jnp.arange(S)
+                ck, kr = c_kv, k_rope_r
+            idx = pos % slots
+            new_cache = MLACache(
+                c_kv=cache.c_kv.at[:, idx].set(ck.astype(cache.c_kv.dtype)),
+                k_rope=cache.k_rope.at[:, idx].set(kr.astype(cache.k_rope.dtype)))
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    assert S == 1 and cache is not None and pos is not None
+    pv = jnp.full((B, 1), pos)
+    q_rope = apply_rope(q_rope, pv, rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], pv, rope_theta)[:, :, 0]
+    slots = cache.c_kv.shape[1]
+    slot = pos % slots if window is not None else pos
+    c_new = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), slot, axis=1)
+    kr_new = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope.astype(cache.k_rope.dtype), slot, axis=1)
+    new_cache = MLACache(c_kv=c_new, k_rope=kr_new)
+
+    kv = jnp.einsum("btr,rhk->bthk", c_new, p["wkv_b"])      # decompress
+    k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_new[:, :, None, :],
+                                  (B, slots, H, qk_rope_dim))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kpos = jnp.arange(slots)
+    valid = ((kpos <= pos % slots) | (pos >= slots)) if window is not None else (kpos <= pos)
+    out = _grouped_attn(qf, k, v, valid[None, None, None, :], scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache

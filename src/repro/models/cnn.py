@@ -1,0 +1,73 @@
+"""Resolution-agnostic CNN classifier — the FL-MAR client model.
+
+Stands in for the paper's "modified YOLOv5m" (§VII-B): the conv trunk accepts
+any square frame resolution (the paper's s_n knob) and global-average-pools
+before the head, so one parameter set trains across resolutions — exactly the
+mechanism the paper's accuracy-vs-resolution experiments rely on.
+
+Pure JAX (no flax): params are nested dicts, apply is a jitted function.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Dict[str, jax.Array]]
+
+
+def _conv(x, w, b, stride=1):
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def init_cnn(key: jax.Array, num_classes: int = 10, in_channels: int = 1,
+             widths: Sequence[int] = (16, 32, 64)) -> Params:
+    params: Params = {}
+    cin = in_channels
+    for i, cout in enumerate(widths):
+        key, k1, k2 = jax.random.split(key, 3)
+        fan_in = 3 * 3 * cin
+        params[f"conv{i}"] = dict(
+            w=jax.random.normal(k1, (3, 3, cin, cout)) * (2.0 / fan_in) ** 0.5,
+            b=jnp.zeros((cout,)),
+        )
+        cin = cout
+    key, k1 = jax.random.split(key)
+    params["head"] = dict(
+        w=jax.random.normal(k1, (cin, num_classes)) * (1.0 / cin) ** 0.5,
+        b=jnp.zeros((num_classes,)),
+    )
+    return params
+
+
+def apply_cnn(params: Params, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, C) any H=W resolution -> (B, num_classes) logits."""
+    x = images
+    n_convs = sum(1 for k in params if k.startswith("conv"))
+    for i in range(n_convs):
+        p = params[f"conv{i}"]
+        x = _conv(x, p["w"], p["b"], stride=1)
+        x = jax.nn.relu(x)
+        # downsample while the spatial extent allows
+        if x.shape[1] >= 2:
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))          # global average pool: resolution-free
+    h = params["head"]
+    return x @ h["w"] + h["b"]
+
+
+def xent_loss(params: Params, images: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = apply_cnn(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(params: Params, images: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = apply_cnn(params, images)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,97 @@
+"""Common transformer building blocks (pure JAX, dict-pytree params)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int) -> dict:
+    return dict(scale=jnp.ones((d,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    sd_in = (2.0 / (d_model + d_ff)) ** 0.5
+    return dict(
+        wi=(jax.random.normal(k1, (d_model, d_ff)) * sd_in).astype(dtype),
+        wg=(jax.random.normal(k2, (d_model, d_ff)) * sd_in).astype(dtype),
+        wo=(jax.random.normal(k3, (d_ff, d_model)) * sd_in).astype(dtype),
+    )
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, vocab: int, d_model: int, dtype=jnp.bfloat16,
+               tied_head: bool = True) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = dict(embed=dict(tokens=(jax.random.normal(k1, (vocab, d_model)) * 0.02).astype(dtype)))
+    if not tied_head:
+        p["lm_head"] = dict(w=(jax.random.normal(k2, (d_model, vocab)) * 0.02).astype(dtype))
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embed"]["tokens"], tokens, axis=0)
+
+
+def lm_logits(p: dict, x: jax.Array) -> jax.Array:
+    if "lm_head" in p:
+        logits = jnp.einsum("...d,dv->...v", x, p["lm_head"]["w"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, p["embed"]["tokens"])
+    return shard(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy; logits (..., V) float32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(ll.dtype)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

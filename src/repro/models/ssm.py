@@ -1,0 +1,319 @@
+"""State-space / linear-recurrence mixers: Mamba (selective scan, for Jamba)
+and RWKV6 "Finch" (data-dependent decay WKV).
+
+Both use CHUNKED scans for train/prefill: lax.scan over sequence chunks with
+an in-chunk parallel form, carrying O(1) recurrent state — this is what makes
+`long_500k` decode trivially memory-feasible for these families and keeps the
+lowered HLO small (one chunk body).  Decode is the single-step recurrence.
+
+Numerical care: decays live in log space; in-chunk pairwise decay factors are
+exp(logw_t - logw_tau) with tau <= t, always <= 1 — no overflow for any decay
+magnitude.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+
+class MambaCache(NamedTuple):
+    conv: jax.Array      # (B, K_conv-1, Di) last inputs for the causal conv
+    h: jax.Array         # (B, Di, N) recurrent state
+
+
+def init_mamba(key: jax.Array, d_model: int, d_inner: int, d_state: int = 16,
+               d_conv: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.bfloat16) -> dict:
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 8)
+    sd = (1.0 / d_model) ** 0.5
+    return dict(
+        in_proj=(jax.random.normal(ks[0], (d_model, d_inner)) * sd).astype(dtype),
+        gate_proj=(jax.random.normal(ks[1], (d_model, d_inner)) * sd).astype(dtype),
+        conv_w=(jax.random.normal(ks[2], (d_conv, d_inner)) * 0.2).astype(dtype),
+        conv_b=jnp.zeros((d_inner,), dtype),
+        a_log=jnp.log(jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                       (d_inner, d_state))),
+        d=jnp.ones((d_inner,), jnp.float32),
+        dt_w=(jax.random.normal(ks[3], (d_inner, dt_rank)) * sd).astype(dtype),
+        dt_proj=(jax.random.normal(ks[4], (dt_rank, d_inner)) * (dt_rank ** -0.5)).astype(dtype),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01))).astype(jnp.float32),
+        bc_proj=(jax.random.normal(ks[5], (d_inner, 2 * d_state)) * sd).astype(dtype),
+        out_proj=(jax.random.normal(ks[6], (d_inner, d_model)) * (1.0 / d_inner) ** 0.5).astype(dtype),
+    )
+
+
+def _mamba_conv_chunk(xc: jax.Array, tail: jax.Array, w: jax.Array,
+                      b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv over one chunk. xc (B,L,Di), tail (B,K-1,Di)."""
+    K = w.shape[0]
+    xext = jnp.concatenate([tail, xc], axis=1)             # (B, L+K-1, Di)
+    out = sum(xext[:, i: i + xc.shape[1], :] * w[i] for i in range(K)) + b
+    return out, xext[:, -(K - 1):, :]
+
+
+def _ssm_chunk(h0: jax.Array, dt: jax.Array, A: jax.Array, Bt: jax.Array,
+               Ct: jax.Array, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """In-chunk parallel selective scan.
+    h0 (B,Di,N); dt,x (B,L,Di); A (Di,N); Bt,Ct (B,L,N) -> (y (B,L,Di), hL)."""
+    # per-step log decay and input
+    la = dt[..., None] * A                                  # (B,L,Di,N)  (<0)
+    u = dt[..., None] * Bt[:, :, None, :] * x[..., None]    # (B,L,Di,N)
+    cla = jnp.cumsum(la, axis=1)                            # inclusive cumulative
+    # contribution of h0 at step t: exp(cla_t) * h0
+    from_h0 = jnp.exp(cla) * h0[:, None]
+    # contribution of u_tau at t: exp(cla_t - cla_tau) * u_tau, tau <= t
+    # use an associative scan to avoid the L^2 blowup in N:
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+    _, acc = jax.lax.associative_scan(comb, (la, u), axis=1)
+    h = from_h0 + acc                                       # (B,L,Di,N)
+    y = jnp.einsum("bldn,bln->bld", h, Ct)
+    return y, h[:, -1]
+
+
+def mamba(p: dict, x: jax.Array, *, mode: str = "train",
+          cache: Optional[MambaCache] = None, chunk: int = 256
+          ) -> Tuple[jax.Array, Optional[MambaCache]]:
+    """x (B,S,D) -> (out (B,S,D), cache').  mode 'decode' needs S==1."""
+    B, S, D = x.shape
+    Di, N = p["a_log"].shape
+    A = -jnp.exp(p["a_log"])                                # (Di,N)
+
+    xin = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = jnp.einsum("bsd,de->bse", x, p["gate_proj"])
+    xin = shard(xin, "batch", "seq", "inner")
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        conv_in = jnp.concatenate([cache.conv, xin], axis=1)   # (B,K,Di)
+        Kc = p["conv_w"].shape[0]
+        xc = jnp.einsum("bke,ke->be", conv_in[:, -Kc:], p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        dt = jax.nn.softplus(
+            jnp.einsum("be,er->br", xc, p["dt_w"]) @ p["dt_proj"]
+            + p["dt_bias"]).astype(jnp.float32)             # (B,Di)
+        bc = jnp.einsum("be,en->bn", xc, p["bc_proj"])
+        Bt, Ct = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+        a = jnp.exp(dt[..., None] * A)                      # (B,Di,N)
+        h = a * cache.h + dt[..., None] * Bt[:, None, :] * xc.astype(jnp.float32)[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, Ct) + p["d"] * xc.astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+        out = jnp.einsum("bse,ed->bsd", out, p["out_proj"])
+        return out, MambaCache(conv=conv_in[:, 1:], h=h)
+
+    # train / prefill: chunked scan
+    pad = (-S) % chunk
+    if pad:
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+    L = xin.shape[1]
+    n_chunks = L // chunk
+    xin_c = xin.reshape(B, n_chunks, chunk, Di).transpose(1, 0, 2, 3)
+    Kc = p["conv_w"].shape[0]
+    conv0 = jnp.zeros((B, Kc - 1, Di), xin.dtype)
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    def step(carry, xc):
+        tail, h = carry
+        xconv, tail = _mamba_conv_chunk(xc, tail, p["conv_w"], p["conv_b"])
+        xconv = jax.nn.silu(xconv)
+        dt = jax.nn.softplus(
+            jnp.einsum("ble,er->blr", xconv, p["dt_w"]) @ p["dt_proj"]
+            + p["dt_bias"]).astype(jnp.float32)
+        bc = jnp.einsum("ble,en->bln", xconv, p["bc_proj"]).astype(jnp.float32)
+        Bt, Ct = jnp.split(bc, 2, axis=-1)
+        y, h = _ssm_chunk(h, dt, A, Bt, Ct, xconv.astype(jnp.float32))
+        y = y + p["d"] * xconv.astype(jnp.float32)
+        return (tail, h), y.astype(x.dtype)
+
+    (tail_end, h_end), ys = jax.lax.scan(step, (conv0, h0), xin_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, Di)[:, :S]
+    out = y * jax.nn.silu(z)
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        # state handoff to decode requires an unpadded scan (padded steps
+        # would evolve h through the conv bias path)
+        assert pad == 0, f"prefill-with-cache needs S % chunk == 0 (S={S})"
+        new_cache = MambaCache(conv=tail_end, h=h_end)
+    return jnp.einsum("bse,ed->bsd", out, p["out_proj"]), new_cache
+
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int = 16,
+                     d_conv: int = 4, dtype=jnp.bfloat16) -> MambaCache:
+    return MambaCache(conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+                      h=jnp.zeros((batch, d_inner, d_state), jnp.float32))
+
+
+# ===========================================================================
+# RWKV6 (Finch): WKV with data-dependent decay
+# ===========================================================================
+
+class RWKVCache(NamedTuple):
+    state: jax.Array     # (B, H, K, V) wkv state
+    x_tm: jax.Array      # (B, D) previous token (time-mix shift)
+    x_cm: jax.Array      # (B, D) previous token (channel-mix shift)
+
+
+def init_rwkv_time_mix(key: jax.Array, d_model: int, n_heads: int,
+                       head_dim: int, lora_rank: int = 64,
+                       dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 9)
+    sd = (1.0 / d_model) ** 0.5
+    H, K = n_heads, head_dim
+    return dict(
+        r_proj=(jax.random.normal(ks[0], (d_model, H, K)) * sd).astype(dtype),
+        k_proj=(jax.random.normal(ks[1], (d_model, H, K)) * sd).astype(dtype),
+        v_proj=(jax.random.normal(ks[2], (d_model, H, K)) * sd).astype(dtype),
+        g_proj=(jax.random.normal(ks[3], (d_model, H, K)) * sd).astype(dtype),
+        # decay = exp(-exp(w0 + x @ lora_a @ lora_b))  (data-dependent, Finch)
+        w_lora_a=(jax.random.normal(ks[4], (d_model, lora_rank)) * sd).astype(dtype),
+        w_lora_b=(jax.random.normal(ks[5], (lora_rank, H, K)) * 0.01).astype(dtype),
+        w0=jnp.full((H, K), -0.6, jnp.float32),
+        u=(jax.random.normal(ks[6], (H, K)) * 0.1).astype(jnp.float32),
+        o_proj=(jax.random.normal(ks[7], (H, K, d_model)) * sd).astype(dtype),
+        mix_r=jnp.full((d_model,), 0.5, jnp.float32),
+        mix_k=jnp.full((d_model,), 0.5, jnp.float32),
+        mix_v=jnp.full((d_model,), 0.5, jnp.float32),
+        mix_w=jnp.full((d_model,), 0.5, jnp.float32),
+        mix_g=jnp.full((d_model,), 0.5, jnp.float32),
+    )
+
+
+def init_rwkv_channel_mix(key: jax.Array, d_model: int, d_ff: int,
+                          dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    sd = (1.0 / d_model) ** 0.5
+    return dict(
+        ffn_k=(jax.random.normal(ks[0], (d_model, d_ff)) * sd).astype(dtype),
+        ffn_v=(jax.random.normal(ks[1], (d_ff, d_model)) * (1.0 / d_ff) ** 0.5).astype(dtype),
+        ffn_r=(jax.random.normal(ks[2], (d_model, d_model)) * sd).astype(dtype),
+        mix_k=jnp.full((d_model,), 0.5, jnp.float32),
+        mix_r=jnp.full((d_model,), 0.5, jnp.float32),
+    )
+
+
+def _shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Token shift: prepend x_prev, drop last. x (B,S,D), x_prev (B,D)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_chunk(S0: jax.Array, r, k, v, logw, u) -> Tuple[jax.Array, jax.Array]:
+    """One chunk of WKV6.  S0 (B,H,K,V); r,k,v,logw (B,L,H,K); u (H,K).
+    o_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Returns (o (B,L,H,V), S_L)."""
+    Lc = r.shape[1]
+    clw = jnp.cumsum(logw, axis=1)                         # inclusive (B,L,H,K)
+    clw_prev = clw - logw                                   # exclusive  = L_{t-1}
+    # from initial state: r_t . (exp(clw_prev_t) * S0)
+    o_init = jnp.einsum("blhk,bhkv->blhv", r * jnp.exp(clw_prev), S0)
+    # intra-chunk pairs tau < t: factor exp(clw_prev_t - clw_tau)
+    decay = clw_prev[:, :, None] - clw[:, None, :]          # (B, t, tau, H, K)
+    mask = (jnp.arange(Lc)[:, None] > jnp.arange(Lc)[None, :])[None, :, :, None, None]
+    fac = jnp.exp(jnp.where(mask, decay, -jnp.inf))        # masked to 0
+    o_intra = jnp.einsum("blhk,blthk,bthk,bthv->blhv", r, fac, k, v)
+    # bonus diagonal term
+    o_diag = jnp.einsum("blhk,blhk,blhv->blhv", r, u[None, None] * k, v)
+    o = o_init + o_intra + o_diag
+    # state update
+    SL = jnp.exp(clw[:, -1])[..., None] * S0 + \
+        jnp.einsum("blhk,blhv->bhkv", jnp.exp(clw[:, -1:] - clw) * k, v)
+    return o, SL
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                  mode: str = "train", cache: Optional[RWKVCache] = None,
+                  chunk: int = 64) -> Tuple[jax.Array, Optional[jax.Array],
+                                            Optional[jax.Array]]:
+    """Returns (out, new_state, new_x_prev). x (B,S,D)."""
+    B, S, D = x.shape
+    H, K = n_heads, head_dim
+    x_prev = cache.x_tm if (mode == "decode" and cache is not None) \
+        else jnp.zeros((B, D), x.dtype)
+    xs = _shift(x, x_prev) if mode != "decode" else x_prev[:, None]
+
+    xr = _mix(x, xs, p["mix_r"]).astype(x.dtype)
+    xk = _mix(x, xs, p["mix_k"]).astype(x.dtype)
+    xv = _mix(x, xs, p["mix_v"]).astype(x.dtype)
+    xw = _mix(x, xs, p["mix_w"]).astype(x.dtype)
+    xg = _mix(x, xs, p["mix_g"]).astype(x.dtype)
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["r_proj"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["k_proj"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["v_proj"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["g_proj"])
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])
+    ww = p["w0"] + jnp.einsum("bsr,rhk->bshk", lora, p["w_lora_b"]).astype(jnp.float32)
+    logw = -jnp.exp(ww)                                     # log decay, < 0
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        S0 = cache.state
+        # o_j = sum_i r_i (S0_ij + u_i k_i v_j);  S1 = diag(w) S0 + k v^T
+        o = jnp.einsum("bhk,bhkv->bhv", r[:, 0], S0) \
+            + jnp.einsum("bhk,bhv->bhv", r[:, 0] * p["u"][None] * k[:, 0], v[:, 0])
+        S1 = jnp.exp(logw[:, 0])[..., None] * S0 \
+            + jnp.einsum("bhk,bhv->bhkv", k[:, 0], v[:, 0])
+        out = (o[:, None] * jax.nn.silu(g).astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bshv,hvd->bsd", out, p["o_proj"])
+        return out, S1, x[:, -1]
+
+    # chunked scan
+    pad = (-S) % chunk
+    if pad:
+        r, k, v, logw = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                         for t in (r, k, v, logw))
+    L = r.shape[1]
+    nch = L // chunk
+    def resh(t):
+        return t.reshape(B, nch, chunk, H, K).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = map(resh, (r, k, v, logw))
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(Sc, inp):
+        rr, kk, vv, ww_ = inp
+        o, Sn = _wkv_chunk(Sc, rr, kk, vv, ww_, p["u"])
+        return Sn, o
+
+    S_end, os = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    o = os.transpose(1, 0, 2, 3, 4).reshape(B, L, H, K)[:, :S]
+    out = (o * jax.nn.silu(g).astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["o_proj"])
+    return out, S_end, x[:, -1]
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, *, mode: str = "train",
+                     x_prev: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    xp = x_prev if (mode == "decode" and x_prev is not None) \
+        else jnp.zeros((B, D), x.dtype)
+    xs = _shift(x, xp) if mode != "decode" else xp[:, None]
+    xk = _mix(x, xs, p["mix_k"]).astype(x.dtype)
+    xr = _mix(x, xs, p["mix_r"]).astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ffn_k"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["ffn_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["ffn_r"]))
+    return rr * vv, x[:, -1]
+
+
+def init_rwkv_cache(batch: int, d_model: int, n_heads: int, head_dim: int
+                    ) -> RWKVCache:
+    return RWKVCache(state=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+                     x_tm=jnp.zeros((batch, d_model), jnp.bfloat16),
+                     x_cm=jnp.zeros((batch, d_model), jnp.bfloat16))

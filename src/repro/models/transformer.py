@@ -1,0 +1,377 @@
+"""The model stack: scanned layer periods covering every zoo architecture.
+
+A config's `block_pattern` lists the layer kinds in one period (e.g. jamba:
+one attention layer among seven mamba layers); parameters for each slot are
+STACKED across periods and the stack runs under `jax.lax.scan`, so the lowered
+HLO contains one period body regardless of depth — essential for tractable
+multi-pod dry-run compiles.
+
+Modes:
+  train    — full-seq forward, returns logits (+ MoE aux loss)
+  prefill  — same math, serving entry point
+  decode   — one token per call against a cache pytree (KV ring buffers for
+             sliding-window attention, O(1) states for SSM/RWKV)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (embed_tokens, init_embed, init_mlp,
+                                 init_rms_norm, apply_mlp, lm_logits, rms_norm,
+                                 softmax_xent)
+from repro.sharding.partition import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(kind: str, key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = cfg.np_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": init_rms_norm(cfg.d_model),
+                 "norm2": init_rms_norm(cfg.d_model)}
+    if kind in ("attn", "attn_moe", "enc_attn", "attn_cross"):
+        if cfg.attention == "mla" and kind != "enc_attn":
+            p["attn"] = attn_lib.init_mla(
+                k1, cfg.d_model, cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank,
+                cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, dt)
+        else:
+            p["attn"] = attn_lib.init_attention(
+                k1, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim,
+                cfg.qkv_bias, dt)
+        if kind == "attn_cross":
+            p["xattn"] = attn_lib.init_attention(
+                jax.random.fold_in(k1, 1), cfg.d_model, cfg.n_heads,
+                cfg.n_heads, cfg.head_dim, False, dt)
+            p["norm3"] = init_rms_norm(cfg.d_model)
+    elif kind in ("mamba", "mamba_moe"):
+        p["mamba"] = ssm_lib.init_mamba(k1, cfg.d_model, cfg.d_inner,
+                                        cfg.d_state, cfg.d_conv, dtype=dt)
+    elif kind == "rwkv":
+        p["rwkv"] = {**init_rwkv(k1, cfg)}
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+
+    if kind.endswith("_moe"):
+        p["moe"] = moe_lib.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+    elif kind != "rwkv":
+        p["mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_rwkv(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    tm = ssm_lib.init_rwkv_time_mix(k1, cfg.d_model, cfg.n_heads, cfg.head_dim,
+                                    dtype=cfg.np_dtype)
+    cm = ssm_lib.init_rwkv_channel_mix(k2, cfg.d_model, cfg.d_ff, cfg.np_dtype)
+    return {f"tm_{k}": v for k, v in tm.items()} | {f"cm_{k}": v for k, v in cm.items()}
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 4)
+    params: Params = init_embed(keys[0], cfg.vocab_size, cfg.d_model,
+                                cfg.np_dtype, cfg.tied_embeddings)
+    params["final_norm"] = init_rms_norm(cfg.d_model)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(cfg.block_pattern))
+        return {f"s{i}_{kind}": _init_sublayer(kind, ks[i], cfg)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    pkeys = jax.random.split(keys[1], cfg.n_periods)
+    params["layers"] = jax.vmap(init_period)(pkeys)     # stacked over periods
+
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[2], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_sublayer("enc_attn", k, cfg))(ekeys)
+        params["enc_final_norm"] = init_rms_norm(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Cache pytree stacked over periods. Sliding-window attention gets a
+    ring buffer of `window` slots; full attention gets `max_seq` slots;
+    SSM/RWKV layers carry O(1) state."""
+    dt = cfg.np_dtype
+
+    def one_period():
+        c: Params = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            nm = f"s{i}_{kind}"
+            if kind in ("attn", "attn_moe", "attn_cross"):
+                slots = min(cfg.sliding_window, max_seq) if cfg.sliding_window else max_seq
+                if cfg.attention == "mla":
+                    c[nm] = attn_lib.init_mla_cache(batch, slots, cfg.kv_lora_rank,
+                                                    cfg.qk_rope_dim, dt)
+                else:
+                    c[nm] = attn_lib.init_kv_cache(batch, slots, cfg.kv_heads,
+                                                   cfg.head_dim, dt,
+                                                   quantized=cfg.kv_cache_int8)
+                if kind == "attn_cross" and cfg.cross_kv_cache:
+                    c[nm] = {"self": c[nm],
+                             "cross": attn_lib.CrossKV(
+                                 xk=jnp.zeros((batch, cfg.encoder_ctx,
+                                               cfg.n_heads, cfg.head_dim), dt),
+                                 xv=jnp.zeros((batch, cfg.encoder_ctx,
+                                               cfg.n_heads, cfg.head_dim), dt))}
+            elif kind in ("mamba", "mamba_moe"):
+                c[nm] = ssm_lib.init_mamba_cache(batch, cfg.d_inner, cfg.d_state,
+                                                 cfg.d_conv, dt)
+            elif kind == "rwkv":
+                c[nm] = ssm_lib.init_rwkv_cache(batch, cfg.d_model, cfg.n_heads,
+                                                cfg.head_dim)
+        return c
+
+    proto = one_period()
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape).copy(), proto)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _sublayer(kind: str, p: Params, cfg: ModelConfig, x: jax.Array, *,
+              mode: str, cache, pos, enc_out) -> Tuple[jax.Array, Any, jax.Array]:
+    """Apply one sublayer. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.asarray(0.0, jnp.float32)
+    window = cfg.sliding_window
+
+    if kind in ("attn", "attn_moe", "enc_attn", "attn_cross"):
+        cross_c = None
+        if kind == "attn_cross" and isinstance(cache, dict):
+            cross_c, cache = cache.get("cross"), cache.get("self")
+        h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+        if cfg.attention == "mla" and kind != "enc_attn":
+            o, new_c = attn_lib.mla_attention(
+                p["attn"], h, qk_nope_dim=cfg.qk_nope_dim,
+                qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
+                mode=mode, cache=cache, pos=pos, window=window,
+                rope_theta=cfg.rope_theta)
+        else:
+            o, new_c = attn_lib.attention(
+                p["attn"], h, mode=mode, cache=cache, pos=pos,
+                window=None if kind == "enc_attn" else window,
+                causal=(kind != "enc_attn"),
+                rope_theta=cfg.rope_theta,
+                use_rope=(kind != "enc_attn"))
+        x = x + o
+        if kind == "attn_cross":
+            h = rms_norm(x, p["norm3"]["scale"], cfg.norm_eps)
+            if cross_c is not None:
+                o, _ = attn_lib.attention(p["xattn"], h, mode="train",
+                                          cross_kv=cross_c, causal=False)
+            else:
+                o, _ = attn_lib.attention(p["xattn"], h, mode="train",
+                                          kv_x=enc_out, causal=False)
+            x = x + o
+        h = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        if kind.endswith("_moe"):
+            o, aux = moe_lib.apply_moe(p["moe"], h, cfg.top_k, cfg.capacity_factor)
+        else:
+            o = apply_mlp(p["mlp"], h)
+        if cross_c is not None:
+            return x + o, {"self": new_c, "cross": cross_c}, aux
+        return x + o, new_c, aux
+
+    if kind in ("mamba", "mamba_moe"):
+        h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+        o, new_c = ssm_lib.mamba(p["mamba"], h, mode=mode, cache=cache,
+                                 chunk=cfg.ssm_chunk)
+        x = x + o
+        h = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        if kind.endswith("_moe"):
+            o, aux = moe_lib.apply_moe(p["moe"], h, cfg.top_k, cfg.capacity_factor)
+        else:
+            o = apply_mlp(p["mlp"], h)
+        return x + o, new_c, aux
+
+    if kind == "rwkv":
+        rp = p["rwkv"]
+        tm = {k[3:]: v for k, v in rp.items() if k.startswith("tm_")}
+        cm = {k[3:]: v for k, v in rp.items() if k.startswith("cm_")}
+        h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+        o, state, x_tm = ssm_lib.rwkv_time_mix(
+            tm, h, n_heads=cfg.n_heads, head_dim=cfg.head_dim, mode=mode,
+            cache=cache, chunk=cfg.rwkv_chunk)
+        x = x + o
+        h = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        o, x_cm = ssm_lib.rwkv_channel_mix(
+            cm, h, mode=mode,
+            x_prev=cache.x_cm if (mode == "decode" and cache is not None) else None)
+        x = x + o
+        new_c = ssm_lib.RWKVCache(state=state, x_tm=x_tm.astype(jnp.bfloat16),
+                                  x_cm=x_cm.astype(jnp.bfloat16)) \
+            if state is not None else None
+        return x, new_c, aux
+
+    raise ValueError(kind)
+
+
+def _encoder_forward(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(cfg.np_dtype)
+    pos = jnp.arange(x.shape[1])
+    # sinusoidal positions (frontend conv/pos-emb stubbed per spec)
+    half = cfg.d_model // 2
+    freqs = jnp.exp(-jnp.arange(half) / max(half - 1, 1) * jnp.log(10000.0))
+    pe = jnp.concatenate([jnp.sin(pos[:, None] * freqs), jnp.cos(pos[:, None] * freqs)], -1)
+    x = x + pe[None].astype(x.dtype)
+
+    def body(x, layer_p):
+        x, _, _ = _sublayer("enc_attn", layer_p, cfg, x, mode="train",
+                            cache=None, pos=None, enc_out=None)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"]["scale"], cfg.norm_eps)
+
+
+def model_forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  *, mode: str = "train",
+                  cache: Optional[Params] = None,
+                  pos: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
+    """Returns (logits, aux_loss, new_cache).
+
+    batch: {"tokens": (B,S)} plus optional "frame_embeds" (audio) /
+    "patch_embeds" (vlm, prepended to the token embeddings).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens).astype(cfg.np_dtype)
+
+    enc_out = None
+    if "enc_out" in batch:                # precomputed (cross_kv_cache path)
+        enc_out = batch["enc_out"]
+    elif cfg.encoder_layers and "frame_embeds" in batch:
+        enc_out = _encoder_forward(params, cfg, batch["frame_embeds"])
+    if cfg.n_patches and "patch_embeds" in batch and mode != "decode":
+        pe = batch["patch_embeds"].astype(cfg.np_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard(x, "batch", "seq", "embed_act")
+
+    def period_body(carry, xs):
+        xx, aux = carry
+        layer_p, layer_c = xs
+        # Megatron-style sequence parallelism on the residual stream: the
+        # scan-saved carry (dominant train-memory term) shards seq over
+        # 'model'; blocks gather/reduce-scatter around it (GSPMD-inserted).
+        xx = shard(xx, "batch", "seq_outer", "embed_act")
+        new_cs = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            nm = f"s{i}_{kind}"
+            c_in = layer_c[nm] if layer_c is not None else None
+            xx, c_out, a = _sublayer(kind, layer_p[nm], cfg, xx, mode=mode,
+                                     cache=c_in, pos=pos, enc_out=enc_out)
+            new_cs[nm] = c_out if c_out is not None else c_in
+            aux = aux + a
+        return (xx, aux), new_cs
+
+    if cfg.remat and mode == "train":
+        if cfg.remat_policy == "dots":
+            period_body = jax.checkpoint(
+                period_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            period_body = jax.checkpoint(period_body)
+
+    if cache is not None:
+        (x, aux), new_cache = jax.lax.scan(
+            period_body, (x, jnp.asarray(0.0, jnp.float32)),
+            (params["layers"], cache))
+    else:
+        def body_nocache(carry, layer_p):
+            out, cs = period_body(carry, (layer_p, None))
+            return out, None
+        (x, aux), _ = jax.lax.scan(
+            body_nocache, (x, jnp.asarray(0.0, jnp.float32)), params["layers"])
+        new_cache = None
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params, x)
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def prepare_cross_cache(params: Params, cfg: ModelConfig, cache: Params,
+                        frame_embeds: jax.Array) -> Tuple[Params, jax.Array]:
+    """Run the encoder ONCE and fill every attn_cross layer's CrossKV entry.
+    Returns (cache, enc_out). This is the admission-time step that makes
+    per-token decode encoder-free (EXPERIMENTS.md §Perf, whisper hillclimb)."""
+    assert cfg.cross_kv_cache, "enable cfg.cross_kv_cache"
+    enc_out = _encoder_forward(params, cfg, frame_embeds)
+
+    def fill(layer_p):
+        out = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "attn_cross":
+                out[f"s{i}_{kind}"] = attn_lib.make_cross_kv(
+                    layer_p[f"s{i}_{kind}"]["xattn"], enc_out)
+        return out
+
+    cross = jax.vmap(fill)(params["layers"])          # stacked over periods
+    new_cache = dict(cache)
+    for i, kind in enumerate(cfg.block_pattern):
+        nm = f"s{i}_{kind}"
+        if kind == "attn_cross":
+            entry = dict(cache[nm])
+            entry["cross"] = cross[nm]
+            new_cache[nm] = entry
+    return new_cache, enc_out
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            aux_weight: float = 0.01) -> jax.Array:
+    logits, aux, _ = model_forward(params, cfg, batch, mode="train")
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    if cfg.n_patches and "patch_embeds" in batch:
+        # logits cover [patches | text]; train only on text positions
+        logits = logits[:, cfg.n_patches:]
+    loss = softmax_xent(logits, labels, mask)
+    return loss + aux_weight * aux
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Params) -> Tuple[jax.Array, Params]:
+    """Block prefill: one full-sequence forward that also fills the decode
+    cache (attention K/V slots, SSM/RWKV states). Returns (logits, cache).
+    Continue with serve_step(..., pos=prompt_len). SSM archs require
+    prompt_len % cfg.ssm_chunk == 0 (state handoff)."""
+    logits, _, new_cache = model_forward(params, cfg, batch, mode="prefill",
+                                         cache=cache)
+    return logits, new_cache
+
+
+def serve_step(params: Params, cfg: ModelConfig, cache: Params,
+               token: jax.Array, pos: jax.Array,
+               extras: Optional[Dict[str, jax.Array]] = None
+               ) -> Tuple[jax.Array, Params]:
+    """One decode step: token (B,) at absolute position `pos` -> (logits (B,V),
+    new_cache). `extras` carries encoder outputs for enc-dec models."""
+    batch = {"tokens": token[:, None]}
+    if extras:
+        batch.update(extras)
+    logits, _, new_cache = model_forward(params, cfg, batch, mode="decode",
+                                         cache=cache, pos=pos)
+    return logits[:, 0], new_cache

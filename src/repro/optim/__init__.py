@@ -1,0 +1,2 @@
+from .adamw import (AdamW, AdamWState, SGD, clip_by_global_norm,
+                    cosine_schedule, global_norm, linear_schedule)

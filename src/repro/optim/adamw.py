@@ -1,0 +1,123 @@
+"""AdamW + SGD + LR schedules in pure JAX (pytree-based, optax-style API).
+
+Optimizer states are float32 regardless of parameter dtype (bf16 training);
+update() returns new params cast back to their original dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads: Params, state: AdamWState, params: Params
+               ) -> Tuple[Params, AdamWState]:
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params: Params):
+        if self.momentum == 0.0:
+            return AdamWState(step=jnp.zeros((), jnp.int32), mu=None, nu=None)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params), nu=None)
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.momentum == 0.0:
+            new_p = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, AdamWState(step=step, mu=None, nu=None)
+        def upd(g, m, p):
+            m = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step=step, mu=new_m, nu=None)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, base_lr * (1 - frac))
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda l: l * scale, tree), norm

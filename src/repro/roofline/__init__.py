@@ -1,0 +1,3 @@
+from .analysis import (Costs, analytic_costs, full_table, load_dryrun,
+                       markdown_table, params_active, params_total,
+                       roofline_terms, PEAK_FLOPS, HBM_BW, LINK_BW)

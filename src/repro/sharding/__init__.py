@@ -1,0 +1,3 @@
+from .partition import (PARAM_AXIS_PATTERNS, active_axis_sizes, active_rules, axes_for_path,
+                        fsdp_tp_rules, logical_to_spec, param_logical_axes,
+                        param_pspecs, param_shardings, shape_aware_spec, shard, use_rules)

@@ -1,0 +1,297 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, plus helpers to build NamedShardings for parameter pytrees.
+
+Parameters are nested dicts whose leaf *paths* determine logical axes via
+`PARAM_AXIS_PATTERNS` (we own every init function, so paths are closed-world).
+Activation constraints go through `shard()` which consults the active rule set
+(a context set by the launcher; a no-op outside any mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+Rules = Dict[str, MeshAxes]
+
+# ---------------------------------------------------------------------------
+# Rule sets.  Logical axes used across the model zoo:
+#   batch, seq, embed, vocab, heads, kv_heads, head_dim, mlp, experts,
+#   expert_mlp, inner (ssm inner width), state (ssm state), layers, window
+# ---------------------------------------------------------------------------
+
+def fsdp_tp_rules(multi_pod: bool, expert_parallel: bool = True,
+                  seq_shard_decode: bool = False) -> Rules:
+    """Default production rules: FSDP over 'data', tensor/expert parallel over
+    'model'; the 'pod' axis (if present) extends the data axis."""
+    data: MeshAxes = ("pod", "data") if multi_pod else "data"
+    rules: Rules = {
+        "batch": data,
+        "seq": None,
+        "embed": "data",          # FSDP shard of params' embed dim
+        "embed_act": None,        # activations keep embed replicated
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model" if expert_parallel else None,
+        "expert_mlp": None if expert_parallel else "model",
+        "inner": "model",
+        "state": None,
+        "layers": None,
+        "kv_seq": "model" if seq_shard_decode else None,
+        "pod_batch": data,
+        # Megatron-style sequence parallelism: the residual stream between
+        # blocks is sharded over 'model' along seq, so scan-saved activations
+        # (the dominant training-memory term) shrink by the TP degree.
+        "seq_outer": "model",
+        "cache_batch": data,
+    }
+    return rules
+
+
+_ACTIVE: threading.local = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules], axis_sizes: Optional[Dict[str, int]] = None):
+    prev = getattr(_ACTIVE, "rules", None)
+    prev_sz = getattr(_ACTIVE, "axis_sizes", None)
+    _ACTIVE.rules = rules
+    _ACTIVE.axis_sizes = axis_sizes
+    try:
+        yield
+    finally:
+        _ACTIVE.rules = prev
+        _ACTIVE.axis_sizes = prev_sz
+
+
+def active_rules() -> Optional[Rules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+def active_axis_sizes() -> Optional[Dict[str, int]]:
+    return getattr(_ACTIVE, "axis_sizes", None)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    parts = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        # avoid reusing a mesh axis twice in one spec (illegal in GSPMD)
+        flat = tuple(m) if isinstance(m, tuple) else ((m,) if m else ())
+        if any(f in used for f in flat):
+            m = None
+        for f in flat:
+            used.add(f)
+        parts.append(m)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o rules).
+    Mesh axes that do not divide the corresponding dim are dropped."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    sizes = active_axis_sizes()
+    if sizes is not None:
+        spec = shape_aware_spec(axes, x.shape, rules, sizes, repair=False)
+    else:
+        spec = logical_to_spec(axes, rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def _axes_prod(m: MeshAxes, sizes: Dict[str, int]) -> int:
+    flat = tuple(m) if isinstance(m, tuple) else ((m,) if m else ())
+    n = 1
+    for a in flat:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def shape_aware_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                     rules: Rules, sizes: Dict[str, int],
+                     repair: bool = True) -> P:
+    """logical_to_spec + divisibility: a mesh axis that does not divide its dim
+    is dropped; with `repair`, dropped axes are relocated to the first
+    unsharded dim they do divide (e.g. kv_heads=8 on model=16 moves the
+    'model' axis onto head_dim)."""
+    parts: list = []
+    used: set = set()
+    dropped: list = []
+    for dim, ax in enumerate(axes):
+        m = rules.get(ax) if ax is not None else None
+        flat = tuple(m) if isinstance(m, tuple) else ((m,) if m else ())
+        flat = tuple(a for a in flat if a is not None)
+        if any(a in used for a in flat):
+            flat = ()
+        if flat and shape[dim] % _axes_prod(flat, sizes) != 0:
+            # try a prefix of the tuple that still divides
+            while flat and shape[dim] % _axes_prod(flat, sizes) != 0:
+                dropped.append(flat[-1])
+                flat = flat[:-1]
+        for a in flat:
+            used.add(a)
+        parts.append(flat if len(flat) > 1 else (flat[0] if flat else None))
+    if repair:
+        for a in dropped:
+            if a in used:
+                continue
+            # right-to-left, never the stacked-layers dim: relocating a mesh
+            # axis onto 'layers' would shard the scan's per-iteration slice
+            # across devices (SPMD full-remat pathology).
+            for dim in range(len(parts) - 1, -1, -1):
+                if axes[dim] == "layers":
+                    continue
+                if parts[dim] is None and shape[dim] % sizes.get(a, 1) == 0 \
+                        and shape[dim] >= sizes.get(a, 1):
+                    parts[dim] = a
+                    used.add(a)
+                    break
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter path -> logical axes.  Longest-match regex on '/'-joined paths.
+# Shapes listed for the stacked-layer ('layers' leading axis) convention.
+# ---------------------------------------------------------------------------
+
+PARAM_AXIS_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings / head
+    (r"embed/tokens$",        ("vocab", "embed")),
+    (r"lm_head/w$",           ("embed", "vocab")),
+    (r"pos_embed/w$",         (None, "embed")),
+    # attention (stacked over layers)
+    (r"attn/wq$",             ("layers", "embed", "heads", "head_dim")),
+    (r"attn/wk$",             ("layers", "embed", "kv_heads", "head_dim")),
+    (r"attn/wv$",             ("layers", "embed", "kv_heads", "head_dim")),
+    (r"attn/wo$",             ("layers", "heads", "head_dim", "embed")),
+    (r"attn/bq$",             ("layers", "heads", "head_dim")),
+    (r"attn/bk$",             ("layers", "kv_heads", "head_dim")),
+    (r"attn/bv$",             ("layers", "kv_heads", "head_dim")),
+    # MLA
+    (r"attn/wq_a$",           ("layers", "embed", None)),
+    (r"attn/wq_b$",           ("layers", None, "heads", "head_dim")),
+    (r"attn/wkv_a$",          ("layers", "embed", None)),
+    (r"attn/wkv_b$",          ("layers", None, "heads", "head_dim")),
+    (r"attn/wk_rope$",        ("layers", "embed", "head_dim")),
+    # dense mlp
+    (r"mlp/wi$",              ("layers", "embed", "mlp")),
+    (r"mlp/wg$",              ("layers", "embed", "mlp")),
+    (r"mlp/wo$",              ("layers", "mlp", "embed")),
+    # moe
+    (r"moe/router$",          ("layers", "embed", "experts")),
+    (r"moe/wi$",              ("layers", "experts", "embed", "expert_mlp")),
+    (r"moe/wg$",              ("layers", "experts", "embed", "expert_mlp")),
+    (r"moe/wo$",              ("layers", "experts", "expert_mlp", "embed")),
+    # mamba
+    (r"mamba/in_proj$",       ("layers", "embed", "inner")),
+    (r"mamba/gate_proj$",     ("layers", "embed", "inner")),
+    (r"mamba/conv_w$",        ("layers", None, "inner")),
+    (r"mamba/conv_b$",        ("layers", "inner")),
+    (r"mamba/a_log$",         ("layers", "inner", "state")),
+    (r"mamba/d$",             ("layers", "inner")),
+    (r"mamba/dt_w$",          ("layers", "inner", None)),
+    (r"mamba/dt_proj$",       ("layers", None, "inner")),
+    (r"mamba/dt_bias$",       ("layers", "inner")),
+    (r"mamba/bc_proj$",       ("layers", "inner", None)),
+    (r"mamba/out_proj$",      ("layers", "inner", "embed")),
+    # rwkv6
+    (r"rwkv/r_proj$",         ("layers", "embed", "heads", "head_dim")),
+    (r"rwkv/k_proj$",         ("layers", "embed", "heads", "head_dim")),
+    (r"rwkv/v_proj$",         ("layers", "embed", "heads", "head_dim")),
+    (r"rwkv/g_proj$",         ("layers", "embed", "heads", "head_dim")),
+    (r"rwkv/w_proj$",         ("layers", "embed", "heads", "head_dim")),
+    (r"rwkv/w_lora_a$",       ("layers", "embed", None)),
+    (r"rwkv/w_lora_b$",       ("layers", None, "heads", "head_dim")),
+    (r"rwkv/u$",              ("layers", "heads", "head_dim")),
+    (r"rwkv/o_proj$",         ("layers", "heads", "head_dim", "embed")),
+    (r"rwkv/mix_.*$",         ("layers", "embed")),
+    (r"rwkv/ffn_k$",          ("layers", "embed", "mlp")),
+    (r"rwkv/ffn_v$",          ("layers", "mlp", "embed")),
+    (r"rwkv/ffn_r$",          ("layers", "embed", "embed_act")),
+    # norms & misc small
+    (r"(^|/)norm[123]?/scale$", ("layers", None)),
+    (r"final_norm/scale$",    (None,)),
+    (r"proj/w$",              ("embed", "embed_act")),   # modality projector
+    # ---- decode caches (leading axis = stacked periods) ----
+    (r"/k$",                  ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")),
+    (r"/v$",                  ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")),
+    (r"/qk$",                 ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")),
+    (r"/qv$",                 ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")),
+    (r"/k_scale$",            ("layers", "cache_batch", "kv_seq", "kv_heads")),
+    (r"/v_scale$",            ("layers", "cache_batch", "kv_seq", "kv_heads")),
+    (r"/xk$",                 ("layers", "cache_batch", "kv_seq", "heads", "head_dim")),
+    (r"/xv$",                 ("layers", "cache_batch", "kv_seq", "heads", "head_dim")),
+    (r"/c_kv$",               ("layers", "cache_batch", "kv_seq", None)),
+    (r"/k_rope$",             ("layers", "cache_batch", "kv_seq", None)),
+    (r"/conv$",               ("layers", "cache_batch", None, "inner")),
+    (r"/h$",                  ("layers", "cache_batch", "inner", "state")),
+    (r"/state$",              ("layers", "cache_batch", "heads", None, None)),
+    (r"/x_tm$",               ("layers", "cache_batch", None)),
+    (r"/x_cm$",               ("layers", "cache_batch", None)),
+)
+
+
+def axes_for_path(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, axes in PARAM_AXIS_PATTERNS:
+        if re.search(pat, path):
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim + 1 and axes[0] == "layers":
+                return axes[1:]          # unstacked variant (enc/dec singles)
+            if len(axes) == ndim - 1:
+                return ("layers",) + tuple(axes)
+    return tuple([None] * ndim)          # replicate by default
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_paths(v, f"{prefix}/{k}" if prefix else k)
+    elif hasattr(tree, "_fields"):      # NamedTuple (caches)
+        for k in tree._fields:
+            yield from _iter_paths(getattr(tree, k), f"{prefix}/{k}" if prefix else k)
+    else:
+        yield prefix, tree
+
+
+def param_logical_axes(params) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {path: axes_for_path(path, leaf.ndim)
+            for path, leaf in _iter_paths(params)}
+
+
+def param_pspecs(params, rules: Rules, axis_sizes: Optional[Dict[str, int]] = None):
+    """Pytree of PartitionSpec matching `params`' structure. With axis_sizes,
+    specs are shape-aware (divisibility-checked + greedy repair)."""
+    def rec(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rec(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rec(getattr(tree, k), f"{prefix}/{k}" if prefix else k)
+                                for k in tree._fields))
+        axes = axes_for_path(prefix, tree.ndim)
+        if axis_sizes is not None:
+            return shape_aware_spec(axes, tree.shape, rules, axis_sizes)
+        return logical_to_spec(axes, rules)
+    return rec(params)
+
+
+def param_shardings(params, mesh: Mesh, rules: Rules):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map(lambda spec: NamedSharding(mesh, spec),
+                                  param_pspecs(params, rules, sizes),
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+"""Test-suite configuration: enable x64 up front so module ordering cannot
+change solver/kernel dtypes mid-suite (the allocator tests need f64
+bisections; kernels pin their own compute dtypes)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)

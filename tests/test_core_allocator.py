@@ -1,0 +1,288 @@
+"""Unit + property tests for repro.core — the paper's resource allocator."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Allocation, Weights, allocate, allocate_fixed_deadline,
+                        default_accuracy, feasible, initial_allocation,
+                        make_system, objective, summarize)
+from repro.core.accuracy import LogAccuracy, log_fit
+from repro.core.energy import rate, t_cmp, t_trans, total_energy, total_time
+from repro.core.lambertw import lambertw0
+from repro.core.sp1 import solve_sp1, solve_sp1_fixed_T
+from repro.core.sp2 import (G, _clamp_rmin, r_min, solve_sp2, solve_sp2_direct,
+                            solve_sp2_v2)
+
+
+def small_system(n=6, seed=0):
+    return make_system(jax.random.PRNGKey(seed), n_devices=n)
+
+
+# ---------------------------------------------------------------------------
+# Lambert W
+# ---------------------------------------------------------------------------
+
+def test_lambertw_identity():
+    z = jnp.concatenate([jnp.linspace(-0.36, 0.0, 50), jnp.logspace(-6, 6, 50)])
+    w = lambertw0(z)
+    np.testing.assert_allclose(np.asarray(w * jnp.exp(w)), np.asarray(z),
+                               rtol=1e-9, atol=1e-12)
+
+
+@given(st.floats(min_value=-0.367, max_value=1e8, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_lambertw_property(z):
+    w = float(lambertw0(jnp.asarray(z)))
+    assert w >= -1.0
+    assert abs(w * np.exp(w) - z) <= 1e-6 * max(1.0, abs(z))
+
+
+# ---------------------------------------------------------------------------
+# System model sanity
+# ---------------------------------------------------------------------------
+
+def test_rate_monotone_in_power_and_bandwidth():
+    sys = small_system()
+    B = jnp.full((sys.n,), 4e5)
+    p = jnp.full((sys.n,), 0.005)
+    assert bool(jnp.all(rate(sys, B, 2 * p) > rate(sys, B, p)))
+    assert bool(jnp.all(rate(sys, 2 * B, p) > rate(sys, B, p)))
+
+
+def test_energy_time_positive():
+    sys = small_system()
+    a = initial_allocation(sys)
+    assert float(total_energy(sys, a)) > 0
+    assert float(total_time(sys, a)) > 0
+
+
+# ---------------------------------------------------------------------------
+# SP1 (water-filling KKT solve)
+# ---------------------------------------------------------------------------
+
+def test_sp1_satisfies_kkt_structure():
+    sys = small_system(8)
+    w = Weights(0.5, 0.5, 10.0).normalized()
+    acc = default_accuracy()
+    init = initial_allocation(sys)
+    f, s, s_hat, T = solve_sp1(sys, w, acc, init.bandwidth, init.power)
+    # boxes
+    assert bool(jnp.all((f >= sys.f_min - 1) & (f <= sys.f_max * (1 + 1e-9))))
+    assert bool(jnp.all((s_hat >= sys.s_lo - 1e-6) & (s_hat <= sys.s_hi + 1e-6)))
+    # deadline holds with the relaxed s_hat and discrete s (T was lifted to cover)
+    tt = t_trans(sys, init.bandwidth, init.power)
+    mk = t_cmp(sys, f, s) + tt
+    assert bool(jnp.all(mk <= T * (1 + 1e-6)))
+
+
+def test_sp1_beats_grid():
+    """SP1 objective (relaxed s) must match a dense grid search per device."""
+    sys = small_system(4, seed=2)
+    w = Weights(0.6, 0.4, 5.0).normalized()
+    acc = default_accuracy()
+    init = initial_allocation(sys)
+    f, s, s_hat, T = solve_sp1(sys, w, acc, init.bandwidth, init.power)
+    tt = np.asarray(t_trans(sys, init.bandwidth, init.power))
+    q = np.asarray(sys.local_iters * sys.zeta * sys.cycles * sys.samples)
+    alpha = w.w1 * sys.global_rounds * sys.kappa * q
+
+    def obj(fv, sv, Tv):
+        return (np.sum(alpha * sv ** 2 * fv ** 2) + w.w2 * sys.global_rounds * Tv
+                - w.rho * np.sum(np.asarray(acc.value(jnp.asarray(sv)))))
+
+    ours = obj(np.asarray(f), np.asarray(s_hat), float(T))
+    # grid: for a range of T values, per-device minimal (f, s) meeting deadline
+    fgrid = np.linspace(1e6, sys.f_max, 160)
+    sgrid = np.linspace(sys.s_lo, sys.s_hi, 160)
+    best = np.inf
+    for Tv in np.linspace(float(T) * 0.5, float(T) * 2.0, 40):
+        tot = w.w2 * sys.global_rounds * Tv
+        ok = True
+        for i in range(sys.n):
+            mk = q[i] * sgrid[None, :] ** 2 / fgrid[:, None] + tt[i]
+            feas = mk <= Tv
+            if not feas.any():
+                ok = False
+                break
+            per = (alpha[i] * sgrid[None, :] ** 2 * fgrid[:, None] ** 2
+                   - w.rho * np.asarray(acc.value(jnp.asarray(sgrid)))[None, :])
+            tot += float(per[feas].min())
+        if ok:
+            best = min(best, tot)
+    assert ours <= best * (1 + 1e-3) + 1e-9
+
+
+def test_sp1_concave_accuracy_model():
+    sys = small_system(5, seed=3)
+    w = Weights(0.5, 0.5, 30.0).normalized()
+    acc = log_fit()
+    init = initial_allocation(sys)
+    f, s, s_hat, T = solve_sp1(sys, w, acc, init.bandwidth, init.power)
+    assert bool(jnp.all(jnp.isfinite(f))) and bool(jnp.all(jnp.isfinite(s_hat)))
+    # higher rho must not decrease resolutions
+    w2 = Weights(0.5, 0.5, 300.0).normalized()
+    _, s_big, s_hat_big, _ = solve_sp1(sys, w2, acc, init.bandwidth, init.power)
+    assert bool(jnp.all(s_hat_big >= s_hat - 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# SP2
+# ---------------------------------------------------------------------------
+
+def _rand_instance(seed, n=4):
+    sys = small_system(n, seed=seed)
+    key = jax.random.PRNGKey(seed + 100)
+    f = jax.random.uniform(key, (n,), minval=3e8, maxval=sys.f_max)
+    res = jnp.asarray(sys.resolutions)
+    s = res[jax.random.randint(jax.random.PRNGKey(seed + 7), (n,), 0, 4)]
+    T = float(jnp.max(t_cmp(sys, f, s))) * 1.5 + 0.02
+    rmin = _clamp_rmin(sys, r_min(sys, f, s, jnp.asarray(T)))
+    return sys, rmin
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_sp2_direct_feasible_and_beats_grid(seed):
+    sys, rmin = _rand_instance(seed, n=3)
+    p, B = solve_sp2_direct(sys, rmin)
+    gain, bits, N0 = np.asarray(sys.gain), np.asarray(sys.bits), sys.noise_psd
+
+    def Gnp(pv, Bv):
+        return Bv * np.log2(1 + gain * pv / (N0 * Bv))
+
+    assert np.all(Gnp(np.asarray(p), np.asarray(B)) >= np.asarray(rmin) * (1 - 1e-6))
+    assert float(B.sum()) <= sys.bandwidth_total * (1 + 1e-6)
+    ours = float(np.sum(np.asarray(p) * bits / Gnp(np.asarray(p), np.asarray(B))))
+
+    shares = np.linspace(0.01, 0.98, 40)
+    pg = np.linspace(sys.p_min, sys.p_max, 20)
+    P = np.stack(np.meshgrid(pg, pg, pg, indexing="ij"), -1).reshape(-1, 3)
+    best = np.inf
+    for s1 in shares:
+        for s2 in shares:
+            s3 = 1.0 - s1 - s2
+            if s3 <= 0.005:
+                continue
+            Brow = np.array([s1, s2, s3]) * sys.bandwidth_total
+            rates = Gnp(P, Brow[None, :])
+            feas = np.all(rates >= np.asarray(rmin)[None, :], -1)
+            if feas.any():
+                e = np.sum(P[feas] * bits / rates[feas], -1)
+                best = min(best, float(e.min()))
+    assert ours <= best * (1 + 1e-3)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_sp2_jong_close_to_direct(seed):
+    """Paper's Algorithm 1 (damped) should approach the exact optimum."""
+    sys, rmin = _rand_instance(seed, n=6)
+    init = initial_allocation(sys)
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    r1 = solve_sp2(sys, w, rmin, init.power, init.bandwidth, max_iters=60)
+    pd, Bd = solve_sp2_direct(sys, rmin)
+
+    def energy(p, B):
+        return float(jnp.sum(p * sys.bits / jnp.maximum(G(sys, p, B), 1e-12)))
+
+    assert energy(r1.power, r1.bandwidth) <= energy(pd, Bd) * 2.0 + 1e-12
+    # both feasible
+    for p, B in [(r1.power, r1.bandwidth), (pd, Bd)]:
+        assert bool(jnp.all(G(sys, p, B) >= rmin * (1 - 1e-6)))
+
+
+def test_sp2_v2_inner_matches_grid():
+    sys, rmin = _rand_instance(1, n=2)
+    init = initial_allocation(sys)
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    rate0 = G(sys, init.power, init.bandwidth)
+    nu = w.w1 * sys.global_rounds / rate0
+    beta = init.power * sys.bits / rate0
+    p, B = solve_sp2_v2(sys, w, nu, beta, rmin)
+    gain, bits, N0 = np.asarray(sys.gain), np.asarray(sys.bits), sys.noise_psd
+    nuN, betaN = np.asarray(nu), np.asarray(beta)
+
+    def Gnp(pv, Bv):
+        return Bv * np.log2(1 + gain * pv / (N0 * Bv))
+
+    def v2obj(pv, Bv):
+        return np.sum(nuN * (pv * bits - betaN * Gnp(pv, Bv)), -1)
+
+    ours = float(v2obj(np.asarray(p), np.asarray(B)))
+    shares = np.linspace(0.002, 0.998, 300)
+    pg = np.linspace(sys.p_min, sys.p_max, 50)
+    P = np.stack(np.meshgrid(pg, pg, indexing="ij"), -1).reshape(-1, 2)
+    best = np.inf
+    for sh in shares:
+        Brow = np.array([sh, 1 - sh]) * sys.bandwidth_total
+        feas = np.all(Gnp(P, Brow[None, :]) >= np.asarray(rmin)[None, :], -1)
+        if feas.any():
+            best = min(best, float(v2obj(P[feas], Brow[None, :]).min()))
+    assert ours <= best + abs(best) * 1e-3 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Full BCD (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def test_bcd_converges_and_feasible():
+    sys = small_system(10, seed=4)
+    res = allocate(sys, Weights(0.5, 0.5, 1.0), max_iters=8)
+    assert res.converged
+    assert feasible(sys, res.allocation)
+    objs = [h["objective"] for h in res.history]
+    assert all(objs[i + 1] <= objs[i] + 1e-6 for i in range(len(objs) - 1))
+
+
+def test_bcd_weight_tradeoff():
+    """Higher w1 (energy emphasis) must not increase energy; higher w2 must
+    not increase completion time (paper Fig. 3 trend)."""
+    sys = small_system(12, seed=5)
+    e_heavy = allocate(sys, Weights(0.9, 0.1, 1.0), max_iters=8)
+    t_heavy = allocate(sys, Weights(0.1, 0.9, 1.0), max_iters=8)
+    assert e_heavy.history[-1]["energy"] <= t_heavy.history[-1]["energy"] * (1 + 1e-6)
+    assert t_heavy.history[-1]["time"] <= e_heavy.history[-1]["time"] * (1 + 1e-6)
+
+
+def test_bcd_rho_monotone_resolution():
+    """Larger rho must not decrease the chosen resolutions (Fig. 7 staircase)."""
+    sys = small_system(10, seed=6)
+    prev = None
+    for rho in [1.0, 20.0, 60.0]:
+        res = allocate(sys, Weights(0.5, 0.5, rho), max_iters=6)
+        mean_s = float(jnp.mean(res.allocation.resolution))
+        if prev is not None:
+            assert mean_s >= prev - 1e-9
+        prev = mean_s
+
+
+def test_bcd_beats_minpixel_energy():
+    """Paper Fig. 3(a): proposed beats MinPixel on energy by a wide margin."""
+    from repro.core.baselines import min_pixel
+
+    sys = small_system(15, seed=7)
+    res = allocate(sys, Weights(0.5, 0.5, 1.0), max_iters=8)
+    bench = min_pixel(sys, jax.random.PRNGKey(0), sweep="power")
+    assert (float(total_energy(sys, res.allocation))
+            < float(total_energy(sys, bench)))
+
+
+def test_fixed_deadline_meets_deadline():
+    sys = small_system(8, seed=8)
+    T_total = 120.0
+    res = allocate_fixed_deadline(sys, Weights(0.99, 0.01, 1.0), T_total, max_iters=8)
+    assert float(total_time(sys, res.allocation)) <= T_total * 1.05
+    assert feasible(sys, res.allocation)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10, deadline=None)
+def test_property_bcd_feasibility(seed):
+    """Allocation is always feasible regardless of the instance draw."""
+    sys = make_system(jax.random.PRNGKey(seed), n_devices=5)
+    res = allocate(sys, Weights(0.5, 0.5, 10.0), max_iters=4)
+    assert feasible(sys, res.allocation)
+    assert float(jnp.sum(res.allocation.bandwidth)) <= sys.bandwidth_total * (1 + 1e-6)

@@ -1,0 +1,55 @@
+"""Arch cost model + allocator integration (DESIGN.md §2)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import Weights, allocate, feasible
+from repro.core.costmodel import (arch_system, from_config,
+                                  tokens_for_resolution)
+from repro.roofline import params_active, params_total
+
+
+def test_param_counts_match_model_cards():
+    """Analytic parameter counts within 10% of the source model cards
+    (granite excepted: the assigned dims imply 47B, noted in EXPERIMENTS)."""
+    expected = {
+        "qwen2-72b": 72e9, "mixtral-8x7b": 47e9, "dbrx-132b": 132e9,
+        "internlm2-20b": 20e9, "jamba-1.5-large-398b": 398e9,
+        "minicpm3-4b": 4e9, "llava-next-34b": 34e9,
+    }
+    for arch, exp in expected.items():
+        got = params_total(get_config(arch))
+        assert abs(got - exp) / exp < 0.1, (arch, got, exp)
+
+
+def test_active_less_than_total_for_moe():
+    for arch in ["mixtral-8x7b", "dbrx-132b", "jamba-1.5-large-398b"]:
+        cfg = get_config(arch)
+        assert params_active(cfg) < 0.6 * params_total(cfg)
+    cfg = get_config("qwen2-72b")
+    assert params_active(cfg) == pytest.approx(params_total(cfg), rel=0.01)
+
+
+def test_tokens_for_resolution_quadratic():
+    assert tokens_for_resolution(320) == 4 * tokens_for_resolution(160)
+
+
+def test_arch_system_allocates_feasibly():
+    key = jax.random.PRNGKey(0)
+    sysp = arch_system(key, "rwkv6-1.6b", n_devices=6)
+    res = allocate(sysp, Weights(0.5, 0.5, 1.0), max_iters=4)
+    assert feasible(sysp, res.allocation)
+
+
+def test_heavier_arch_prefers_lower_resolution():
+    """At equal weights, a 20B local model must not choose higher frame
+    resolutions than a 1.6B one (the c_n integration doing its job)."""
+    key = jax.random.PRNGKey(1)
+    rho = 2e4   # accuracy pressure strong enough to matter for the light arch
+    s_light = arch_system(key, "rwkv6-1.6b", n_devices=6)
+    s_heavy = arch_system(key, "internlm2-20b", n_devices=6)
+    r_light = allocate(s_light, Weights(0.5, 0.5, rho), max_iters=4)
+    r_heavy = allocate(s_heavy, Weights(0.5, 0.5, rho), max_iters=4)
+    assert float(jnp.mean(r_heavy.allocation.resolution)) <= \
+        float(jnp.mean(r_light.allocation.resolution)) + 1e-6

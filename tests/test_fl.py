@@ -1,0 +1,124 @@
+"""FL substrate tests: FedAvg math, resolution mechanism, simulator ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Weights, make_system
+from repro.fl import (fedavg, local_train, make_eval_set,
+                      make_federated_dataset, render, run_federated, simulate)
+from repro.models.cnn import accuracy, apply_cnn, init_cnn, xent_loss
+
+
+def test_fedavg_weighted_mean():
+    p1 = {"a": jnp.ones((3,)), "b": {"c": jnp.zeros((2,))}}
+    p2 = {"a": jnp.zeros((3,)), "b": {"c": jnp.ones((2,))}}
+    avg = fedavg([p1, p2], jnp.asarray([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(avg["a"]), 0.75)
+    np.testing.assert_allclose(np.asarray(avg["b"]["c"]), 0.25)
+
+
+def test_fedavg_single_client_equals_local():
+    """With one client, FedAvg == plain local training (oracle property)."""
+    key = jax.random.PRNGKey(0)
+    ds = make_federated_dataset(key, n_clients=1, per_client=32,
+                                num_classes=4, base_resolution=16)
+    r = run_federated(jax.random.PRNGKey(1), ds, [16], global_rounds=3,
+                      local_iters=2, lr=0.05, eval_n=64)
+    k_init, _ = jax.random.split(jax.random.PRNGKey(1))  # mirror run_federated
+    params = init_cnn(k_init, num_classes=4)
+    imgs = render(ds.images[0], 16)
+    for _ in range(3):
+        params, _ = local_train(params, imgs, ds.labels[0], 0.05, 2)
+    leaves1 = jax.tree_util.tree_leaves(r.params)
+    leaves2 = jax.tree_util.tree_leaves(params)
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_render_shapes_and_identity():
+    key = jax.random.PRNGKey(2)
+    ds = make_federated_dataset(key, n_clients=2, per_client=8,
+                                base_resolution=16)
+    assert render(ds.images, 8).shape == (2, 8, 8, 8, 1)
+    np.testing.assert_array_equal(np.asarray(render(ds.images, 16)),
+                                  np.asarray(ds.images))
+
+
+def test_render_block_mean():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    y = render(x, 2)
+    np.testing.assert_allclose(np.asarray(y)[0, :, :, 0],
+                               [[2.5, 4.5], [10.5, 12.5]])
+
+
+def test_resolution_accuracy_monotone_fast():
+    """Low-res rendering must destroy class evidence (linear-probe check —
+    fast proxy for the full training sweep in benchmarks fig7)."""
+    key = jax.random.PRNGKey(3)
+    ds = make_federated_dataset(key, n_clients=4, per_client=128,
+                                num_classes=4, base_resolution=16)
+    ev_i, ev_l = make_eval_set(jax.random.fold_in(key, 9), ds, n=512)
+
+    def ridge_acc(res):
+        tr = np.asarray(render(ds.images, res)).reshape(4 * 128, -1)
+        te = np.asarray(render(ev_i, res)).reshape(512, -1)
+        ytr = np.asarray(ds.labels).reshape(-1)
+        # one-vs-all ridge regression
+        A = tr.T @ tr + 1e-1 * np.eye(tr.shape[1])
+        Y = np.eye(4)[ytr]
+        Wm = np.linalg.solve(A, tr.T @ Y)
+        pred = te @ Wm
+        return float((pred.argmax(1) == np.asarray(ev_l)).mean())
+
+    a4, a16 = ridge_acc(4), ridge_acc(16)
+    assert a16 > a4 + 0.05, (a4, a16)
+
+
+def test_noniid_hurts():
+    key = jax.random.PRNGKey(4)
+    kw = dict(n_clients=4, per_client=64, num_classes=4, base_resolution=16)
+    ds_iid = make_federated_dataset(key, split="iid", **kw)
+    ds_non = make_federated_dataset(key, split="noniid-1", **kw)
+    r_iid = run_federated(jax.random.PRNGKey(5), ds_iid, [16] * 4,
+                          global_rounds=8, local_iters=3, lr=0.1, eval_n=128)
+    r_non = run_federated(jax.random.PRNGKey(5), ds_non, [16] * 4,
+                          global_rounds=8, local_iters=3, lr=0.1, eval_n=128)
+    assert r_iid.round_accuracy[-1] >= r_non.round_accuracy[-1] - 0.02
+
+
+def test_simulator_ledger_consistent():
+    key = jax.random.PRNGKey(6)
+    sysp = make_system(key, n_devices=4)
+    res = simulate(jax.random.fold_in(key, 1), sysp, Weights(0.5, 0.5, 10.0),
+                   dataset_resolutions=(4, 8, 12, 16), global_rounds=2,
+                   local_iters=2)
+    led = res.ledger
+    assert led["energy_total_J"] == pytest.approx(
+        led["energy_per_round_J"] * 2, rel=1e-6)
+    assert led["time_total_s"] > 0 and np.isfinite(led["final_accuracy"])
+
+
+def test_cnn_resolution_agnostic():
+    key = jax.random.PRNGKey(7)
+    p = init_cnn(key, num_classes=5)
+    for r in (4, 8, 16):
+        x = jax.random.normal(key, (3, r, r, 1))
+        assert apply_cnn(p, x).shape == (3, 5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_property_fedavg_preserves_scale(seed):
+    key = jax.random.PRNGKey(seed)
+    ps = [init_cnn(jax.random.fold_in(key, i), num_classes=3) for i in range(3)]
+    wts = jnp.abs(jax.random.normal(key, (3,))) + 0.1
+    avg = fedavg(ps, wts)
+    for leaf, *others in zip(jax.tree_util.tree_leaves(avg),
+                             *[jax.tree_util.tree_leaves(p) for p in ps]):
+        lo = np.minimum.reduce([np.asarray(o) for o in others])
+        hi = np.maximum.reduce([np.asarray(o) for o in others])
+        assert (np.asarray(leaf) >= lo - 1e-6).all()
+        assert (np.asarray(leaf) <= hi + 1e-6).all()

@@ -1,0 +1,149 @@
+"""Launch-layer + roofline unit tests (no 512-device env needed: these test
+the pure functions the dry-run composes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.specs import (LONG_WINDOW, SHAPES, adapt_config, batch_specs,
+                                decode_cache_len, supported)
+from repro.roofline import analytic_costs, roofline_terms
+
+
+def test_shapes_table_matches_assignment():
+    assert SHAPES["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert SHAPES["prefill_32k"] == dict(kind="prefill", seq=32768, batch=32)
+    assert SHAPES["decode_32k"] == dict(kind="decode", seq=32768, batch=128)
+    assert SHAPES["long_500k"] == dict(kind="decode", seq=524288, batch=1)
+
+
+def test_supported_matrix():
+    skips = [(a, s) for a in ARCHS for s in SHAPES
+             if not supported(get_config(a), s)]
+    assert skips == [("whisper-large-v3", "long_500k")]
+
+
+def test_long_500k_forces_sliding_window_on_dense():
+    cfg = adapt_config(get_config("qwen2-72b"), "long_500k")
+    assert cfg.sliding_window == LONG_WINDOW
+    # native SWA arch keeps its own window
+    cfg2 = adapt_config(get_config("mixtral-8x7b"), "long_500k")
+    assert cfg2.sliding_window == 4096
+    # attention-free arch untouched
+    cfg3 = adapt_config(get_config("rwkv6-1.6b"), "long_500k")
+    assert cfg3.sliding_window is None
+
+
+def test_batch_specs_shapes():
+    # llava train: patches + text = 4096 total positions
+    cfg = adapt_config(get_config("llava-next-34b"), "train_4k")
+    sp = batch_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096 - cfg.n_patches)
+    assert sp["patch_embeds"].shape == (256, cfg.n_patches, cfg.d_model)
+    # whisper decode baseline carries frames; optimized variant does not
+    wcfg = adapt_config(get_config("whisper-large-v3"), "decode_32k")
+    assert "frame_embeds" in batch_specs(wcfg, "decode_32k")
+    assert "frame_embeds" not in batch_specs(
+        wcfg.replace(cross_kv_cache=True), "decode_32k")
+
+
+def test_decode_cache_len_ring_vs_full():
+    mix = adapt_config(get_config("mixtral-8x7b"), "long_500k")
+    assert decode_cache_len(mix, "long_500k") == 4096          # ring buffer
+    qw = adapt_config(get_config("qwen2-72b"), "decode_32k")
+    assert decode_cache_len(qw, "decode_32k") == 32768         # full cache
+
+
+def test_roofline_terms_positive_and_dominant():
+    for arch in ["qwen2-72b", "mixtral-8x7b", "rwkv6-1.6b"]:
+        for shape in ["train_4k", "decode_32k"]:
+            r = roofline_terms(arch, shape)
+            assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+            assert r["dominant"] in ("compute", "memory", "collective")
+            assert 0 < r["useful_ratio"] <= 1.05
+
+
+def test_roofline_multipod_scales_compute_down():
+    s1 = roofline_terms("qwen2-72b", "train_4k", multi_pod=False)
+    s2 = roofline_terms("qwen2-72b", "train_4k", multi_pod=True)
+    assert s2["t_compute_s"] == pytest.approx(s1["t_compute_s"] / 2, rel=0.01)
+
+
+def test_ep_only_when_divisible():
+    """mixtral (E=8) cannot EP on a model axis of 16: its baseline collective
+    term must not include an all-to-all component (the compiled-HLO-verified
+    behaviour of the shape-aware repair)."""
+    mix_ep = analytic_costs("mixtral-8x7b", "train_4k", expert_parallel=True)
+    mix_noep = analytic_costs("mixtral-8x7b", "train_4k", expert_parallel=False)
+    assert mix_ep.coll_bytes_dev == pytest.approx(mix_noep.coll_bytes_dev)
+    dbrx_ep = analytic_costs("dbrx-132b", "train_4k", expert_parallel=True)
+    dbrx_noep = analytic_costs("dbrx-132b", "train_4k", expert_parallel=False)
+    assert dbrx_ep.coll_bytes_dev > 3 * dbrx_noep.coll_bytes_dev
+
+
+def test_accum_reduces_nothing_but_fsdp():
+    a1 = analytic_costs("dbrx-132b", "train_4k", expert_parallel=False)
+    a8 = analytic_costs("dbrx-132b", "train_4k", expert_parallel=False,
+                        accum_steps=8)
+    assert a8.flops_global == pytest.approx(a1.flops_global)
+    assert a8.coll_bytes_dev > a1.coll_bytes_dev
+
+
+def test_grad_accum_matches_full_batch():
+    """accum_steps must be loss/grad-equivalent to the full batch (up to
+    accumulation-order numerics)."""
+    from repro.launch.steps import make_train_step
+    from repro.models.transformer import init_model
+    from repro.optim import AdamW
+
+    cfg = ARCHS["internlm2-20b"].reduced().replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    opt = AdamW(lr=1e-3)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+
+    s1, _ = make_train_step(cfg, opt, accum_steps=1)
+    s2, _ = make_train_step(cfg, opt, accum_steps=2)
+    p1, _, m1 = s1(params, opt.init(params), batch)
+    p2, _, m2 = s2(params, opt.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_checkpoint_roundtrip_with_opt_state():
+    import tempfile
+
+    from repro.checkpoint import restore, save
+    from repro.models.transformer import init_model
+    from repro.optim import AdamW
+
+    cfg = ARCHS["rwkv6-1.6b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = AdamW()
+    state = {"params": params, "opt": opt.init(params)}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, state, step=7)
+        back = restore(d, state)
+        from repro.checkpoint import latest_step
+        assert latest_step(d) == 7
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_pipeline_deterministic_and_sharded():
+    from repro.data import SyntheticLM, shard_for_host
+
+    a = next(iter(SyntheticLM(1000, 8, 64, seed=3)))
+    b = next(iter(SyntheticLM(1000, 8, 64, seed=3)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    sh0 = shard_for_host(a, 0, 2)
+    sh1 = shard_for_host(a, 1, 2)
+    np.testing.assert_array_equal(
+        np.concatenate([sh0["tokens"], sh1["tokens"]]), a["tokens"])

@@ -1,0 +1,80 @@
+"""Cross-checks of the paper-literal Appendix-D SP2 path (Lambert-W dual +
+Theorem-2 closed forms) against the exact solver, on rate-TIGHT instances
+where Theorem 2's tight branch is exact."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Weights, make_system
+from repro.core.sp2 import (G, _clamp_rmin, solve_sp2_direct, solve_sp2_v2,
+                            solve_sp2_v2_thm2)
+
+
+def _tight_instance(seed=0, n=8):
+    """An instance where the deadline leaves just enough rate headroom that
+    every device's rate constraint binds at the optimum."""
+    sysp = make_system(jax.random.PRNGKey(seed), n_devices=n)
+    # demand most of what maximum power can deliver at an equal split
+    B0 = jnp.full((n,), sysp.bandwidth_total / n)
+    p0 = jnp.full((n,), sysp.p_max)
+    rmin = _clamp_rmin(sysp, 0.9 * G(sysp, p0, B0))
+    return sysp, rmin
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_thm2_matches_exact_inner_when_tight(seed):
+    sysp, rmin = _tight_instance(seed)
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    rate0 = G(sysp, jnp.full((sysp.n,), sysp.p_max),
+              jnp.full((sysp.n,), sysp.bandwidth_total / sysp.n))
+    nu = w.w1 * sysp.global_rounds / rate0
+    beta = sysp.p_max * sysp.bits / rate0
+
+    p_t, B_t = solve_sp2_v2_thm2(sysp, w, nu, beta, rmin)
+    p_e, B_e = solve_sp2_v2(sysp, w, nu, beta, rmin)
+
+    def v2obj(p, B):
+        return float(jnp.sum(nu * (p * sysp.bits - beta * G(sysp, p, B))))
+
+    # both feasible for the rate floor, thm2 within 2% of the exact optimum
+    assert bool(jnp.all(G(sysp, p_t, B_t) >= rmin * (1 - 1e-3)))
+    exact, lit = v2obj(p_e, B_e), v2obj(p_t, B_t)
+    assert lit <= exact + abs(exact) * 0.02 + 1e-12
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_direct_beats_or_ties_thm2_energy(seed):
+    """Global-exactness sanity: the direct solver's transmission energy is
+    never worse than the Appendix-D construction's."""
+    sysp, rmin = _tight_instance(seed)
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    rate0 = G(sysp, jnp.full((sysp.n,), sysp.p_max),
+              jnp.full((sysp.n,), sysp.bandwidth_total / sysp.n))
+    nu = w.w1 * sysp.global_rounds / rate0
+    beta = sysp.p_max * sysp.bits / rate0
+    p_t, B_t = solve_sp2_v2_thm2(sysp, w, nu, beta, rmin)
+    p_d, B_d = solve_sp2_direct(sysp, rmin)
+
+    def energy(p, B):
+        return float(jnp.sum(p * sysp.bits / jnp.maximum(G(sysp, p, B), 1e-12)))
+
+    assert energy(p_d, B_d) <= energy(p_t, B_t) * (1 + 1e-6)
+
+
+def test_thm2_bandwidth_formula_consistency():
+    """At the dual optimum, the tight-branch bandwidth of Theorem 2 equals
+    r_min ln2/(W+1): sum over all-tight devices ~= B (the identity that makes
+    the mu-bisection a bandwidth waterfilling)."""
+    sysp, rmin = _tight_instance(5)
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    rate0 = G(sysp, jnp.full((sysp.n,), sysp.p_max),
+              jnp.full((sysp.n,), sysp.bandwidth_total / sysp.n))
+    nu = w.w1 * sysp.global_rounds / rate0
+    beta = sysp.p_max * sysp.bits / rate0
+    p_t, B_t = solve_sp2_v2_thm2(sysp, w, nu, beta, rmin)
+    total = float(jnp.sum(B_t))
+    assert total == pytest.approx(sysp.bandwidth_total, rel=0.02)
