@@ -1,15 +1,19 @@
 """Benchmark harness — one function per paper figure/table.
 
-    PYTHONPATH=src python -m benchmarks.run             # all
-    PYTHONPATH=src python -m benchmarks.run fig3 fig8   # subset
+    PYTHONPATH=src python -m benchmarks.run                   # all
+    PYTHONPATH=src python -m benchmarks.run fig3 fig8         # subset
+    PYTHONPATH=src python -m benchmarks.run --json out.json fleet
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's metric).
+``--json PATH`` additionally writes the rows as a BENCH_*.json-style artifact
+for the perf trajectory (list of {name, us_per_call, derived} objects).
 Scaled down from the paper's N=50/100-rep setup to run on one CPU core; the
 trends, not the absolute magnitudes, are the reproduction target
 (EXPERIMENTS.md compares against the paper's claims).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -17,16 +21,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (Weights, allocate, allocate_fixed_deadline,
-                        make_system, total_energy, total_time)
+                        allocate_fleet, make_fleet, make_system, total_energy,
+                        total_time)
 from repro.core.baselines import comm_only, comp_only, min_pixel, rand_pixel, scheme1
 from repro.core.types import dbm_to_watt
 
 N_DEV = 12
 REPS = 2
 
+_ROWS: list = []
+
 
 def _row(name, t0, t1, derived, calls=1):
     us = (t1 - t0) / max(calls, 1) * 1e6
+    _ROWS.append(dict(name=name, us_per_call=round(us), derived=str(derived)))
     print(f"{name},{us:.0f},{derived}", flush=True)
 
 
@@ -198,6 +206,25 @@ def table_allocator_scaling():
         _row(f"scaling.N{N}", t0, t1, f"sp2_direct={1e3*(t1-t0):.1f}ms")
 
 
+def fleet_scale():
+    """Fleet allocation: one vmap'd BCD solve across C cells x N devices —
+    the allocate_fleet acceptance row (>= 64 cells x 2048 devices)."""
+    C, N = 64, 2048
+    key = jax.random.PRNGKey(31)
+    fleet = make_fleet(key, n_cells=C, n_devices=N,
+                       bandwidth_total=20e6 * N / 50)
+    w = Weights(0.5, 0.5, 1.0)
+    t0 = time.time()
+    res = allocate_fleet(fleet, w, max_iters=3)
+    jax.block_until_ready(res.allocation.bandwidth)
+    t1 = time.time()
+    conv = int(jnp.sum(res.converged))
+    _row(f"fleet.C{C}.N{N}", t0, t1,
+         f"devices={C * N};cells_converged={conv}/{C};"
+         f"mean_obj={float(jnp.mean(res.objective)):.4g};"
+         f"wall_s={t1 - t0:.1f}")
+
+
 def roofline_table():
     """Dry-run roofline summary (reads dryrun_baseline.jsonl if present)."""
     import os
@@ -256,16 +283,32 @@ BENCHES = {
     "fig8": fig8_joint_vs_single,
     "fig9": fig9_vs_scheme1,
     "scaling": table_allocator_scaling,
+    "fleet": fleet_scale,
     "ablations": ablations,
     "roofline": roofline_table,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            sys.exit("--json requires a path argument")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    which = args or list(BENCHES)
+    unknown = [n for n in which if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench {unknown}; available: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for name in which:
         BENCHES[name]()
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(dict(rows=_ROWS, benches=which), fh, indent=1)
+        print(f"# wrote {len(_ROWS)} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

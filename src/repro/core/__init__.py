@@ -9,16 +9,18 @@ Public API:
 """
 from .accuracy import (AccuracyModel, LinearAccuracy, LogAccuracy,
                        default_accuracy, linear_from_endpoints, log_fit)
-from .bcd import BCDResult, allocate, allocate_fixed_deadline, initial_allocation
-from .channel import expected_gain, make_system, sample_gain
+from .bcd import (BCDResult, FleetResult, allocate, allocate_fixed_deadline,
+                  allocate_fleet, initial_allocation, stack_systems)
+from .channel import expected_gain, make_fleet, make_system, sample_gain
 from .energy import (feasible, objective, round_time, summarize,
                      total_accuracy, total_energy, total_time)
 from .types import Allocation, SystemParams, Weights, dbm_to_watt
 
 __all__ = [
     "AccuracyModel", "LinearAccuracy", "LogAccuracy", "default_accuracy",
-    "linear_from_endpoints", "log_fit", "BCDResult", "allocate",
-    "allocate_fixed_deadline", "initial_allocation", "expected_gain",
+    "linear_from_endpoints", "log_fit", "BCDResult", "FleetResult",
+    "allocate", "allocate_fixed_deadline", "allocate_fleet",
+    "initial_allocation", "stack_systems", "expected_gain", "make_fleet",
     "make_system", "sample_gain", "feasible", "objective", "round_time",
     "summarize", "total_accuracy", "total_energy", "total_time",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",

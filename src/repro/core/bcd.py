@@ -1,19 +1,36 @@
-"""Algorithm 2: full BCD resource-allocation loop (paper §V-D)."""
+"""Algorithm 2: full BCD resource-allocation loop (paper §V-D).
+
+The outer loop is a single jitted `lax.while_loop` with an on-device
+convergence check: no Python-level `float()` / `.tolist()` syncs inside the
+iteration. Per-iteration metrics accumulate into a fixed-size traced ledger
+(one row per iteration) that is materialized into `BCDResult.history`
+exactly once, after the loop finishes. Because the whole solve is one traced
+computation, it `vmap`s across base-station cells — see `allocate_fleet`.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from functools import partial
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from . import energy as en
 from .accuracy import AccuracyModel, default_accuracy
-from .sp1 import solve_sp1, solve_sp1_fixed_T
-from .sp2 import SP2Result, r_min, solve_sp2, solve_sp2_direct
+from .energy import rate as _rate
+from .sp1 import _solve_sp1_fixed_impl, _solve_sp1_impl
+from .sp2 import _golden_argmin, _sp2_direct_impl, _sp2_jong_core, r_min
 from .types import Allocation, SystemParams, Weights
 
 Array = jnp.ndarray
+
+# ledger column order (one row per BCD iteration)
+_LEDGER_COLS = ("objective", "energy", "time", "accuracy",
+                "sp2_iters", "sp2_residual", "rel_step")
+_FIXED_COLS = ("energy", "time", "accuracy", "rel_step")
 
 
 @dataclasses.dataclass
@@ -23,6 +40,22 @@ class BCDResult:
     history: List[dict]
     iters: int
     converged: bool
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Batched BCD solve across C independent base-station cells.
+
+    All leaves carry a leading cell axis: allocation arrays are (C, N),
+    per-cell scalars are (C,). `history` is the raw iteration ledger
+    (C, max_iters, len(columns)); rows past a cell's `iters` are NaN.
+    """
+    allocation: Allocation   # (C, N) leaves
+    objective: Array         # (C,)
+    iters: Array             # (C,) int32
+    converged: Array         # (C,) bool
+    history: Array           # (C, max_iters, len(columns))
+    columns: tuple = _LEDGER_COLS
 
 
 def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
@@ -37,6 +70,96 @@ def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
     )
 
 
+def _init_carry_state(sys: SystemParams, alloc: Allocation):
+    """(B, p, f, s, s_hat, T) arrays for the while_loop carry."""
+    dtype = jnp.asarray(alloc.bandwidth).dtype
+    s_hat = alloc.s_relaxed if alloc.s_relaxed is not None else alloc.resolution
+    T = alloc.T if alloc.T is not None else jnp.zeros((), dtype)
+    return (alloc.bandwidth, alloc.power, alloc.freq, alloc.resolution,
+            jnp.asarray(s_hat), jnp.asarray(T, dtype))
+
+
+def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
+    """Shared BCD driver: fixed-size NaN ledger, on-device convergence on the
+    relative (B, p, f, s) step, one `lax.while_loop`. `step(state)` performs
+    one block-coordinate update and returns (new_state, metric scalars); the
+    driver appends the rel-step column and writes the ledger row.
+    Returns (*state, iters, converged, ledger)."""
+    dtype = state0[0].dtype
+    ledger0 = jnp.full((max_iters, ncols), jnp.nan, dtype)
+    if max_iters == 0:   # nothing to iterate: return the start point untouched
+        return (*state0, jnp.zeros((), jnp.int32), jnp.zeros((), bool), ledger0)
+    prev0 = jnp.concatenate([state0[0], state0[1], state0[2], state0[3]])
+
+    def cond(c):
+        k, _, _, conv, _ = c
+        return (k < max_iters) & (~conv)
+
+    def body(c):
+        k, state, prev, _, ledger = c
+        state, metrics = step(state)
+        cur = jnp.concatenate([state[0], state[1], state[2], state[3]])
+        rel = jnp.linalg.norm(cur - prev) \
+            / jnp.maximum(jnp.linalg.norm(prev), 1e-12)
+        row = jnp.stack([*(m.astype(dtype) for m in metrics),
+                         rel.astype(dtype)])
+        ledger = ledger.at[k].set(row)
+        return k + 1, state, cur, rel <= tol, ledger
+
+    k, state, _, conv, ledger = lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), state0, prev0,
+                     jnp.zeros((), bool), ledger0))
+    return (*state, k, conv, ledger)
+
+
+@partial(jax.jit, static_argnames=("acc", "max_iters", "sp2_method",
+                                   "sp2_iters"))
+def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
+                   state0, max_iters: int, tol,
+                   sp2_method: str, sp2_iters: int):
+    """Device-resident Algorithm 2. Returns
+    (B, p, f, s, s_hat, T, iters, converged, ledger)."""
+    dtype = state0[0].dtype
+    warr_sp1 = jnp.stack([warr[0], jnp.maximum(warr[1], 1e-9), warr[2]])
+
+    def step(state):
+        B, p, _, _, _, _ = state
+        tt = sys.bits / jnp.maximum(_rate(sys, B, p), 1e-12)
+        f, s, s_hat, T = _solve_sp1_impl(sys, warr_sp1, acc, tt)
+        rmin = r_min(sys, f, s, T)
+        if sp2_method == "direct":
+            p_new, B_new = _sp2_direct_impl(sys, rmin)
+            sp2_it = jnp.zeros((), dtype)
+            sp2_res = jnp.zeros((), dtype)
+        else:
+            p_new, B_new, _, _, it2, res2 = _sp2_jong_core(
+                sys, warr[0], rmin, p, B, max_iters=sp2_iters)
+            sp2_it = it2.astype(dtype)
+            sp2_res = res2.astype(dtype)
+        w = Weights(warr[0], warr[1], warr[2])
+        alloc = Allocation(bandwidth=B_new, power=p_new, freq=f, resolution=s,
+                           s_relaxed=s_hat, T=T)
+        metrics = (en.objective(sys, w, acc, alloc),
+                   en.total_energy(sys, alloc),
+                   en.total_time(sys, alloc),
+                   en.total_accuracy(acc, alloc),
+                   sp2_it, sp2_res)
+        return (B_new, p_new, f, s, s_hat, T), metrics
+
+    return _bcd_while(state0, max_iters, len(_LEDGER_COLS), tol, step)
+
+
+def _materialize_history(ledger: np.ndarray, iters: int,
+                         cols: Sequence[str]) -> List[dict]:
+    out = []
+    for i in range(iters):
+        row = dict(iter=i + 1)
+        for c, v in zip(cols, ledger[i]):
+            row[c] = int(v) if c == "sp2_iters" else float(v)
+        out.append(row)
+    return out
+
+
 def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
              max_iters: int = 20, tol: float = 1e-6,
              init: Optional[Allocation] = None,
@@ -45,51 +168,31 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
 
     sp2_method: "direct" (exact boundary-power convex solve, beyond-paper,
     the default engine) or "jong" (the paper's Algorithm 1 Newton-like loop).
+    The whole BCD iteration compiles to one jitted computation; convergence
+    is decided on device and the history ledger crosses the host boundary
+    exactly once, at the end.
     """
     acc = acc if acc is not None else default_accuracy()
     w = w.normalized()
-    alloc = init if init is not None else initial_allocation(sys)
-    history: List[dict] = []
-    prev = alloc.flat()
-    converged = False
-    k = 0
-    for k in range(1, max_iters + 1):
-        f, s, s_hat, T = solve_sp1(sys, w, acc, alloc.bandwidth, alloc.power)
-        rmin = r_min(sys, f, s, T)
-        if sp2_method == "direct":
-            p_new, B_new = solve_sp2_direct(sys, rmin)
-            sp2 = SP2Result(power=p_new, bandwidth=B_new, nu=None, beta=None,
-                            iters=0, residual=0.0)
-        else:
-            sp2 = solve_sp2(sys, w, rmin, alloc.power, alloc.bandwidth,
-                            max_iters=sp2_iters)
-        alloc = Allocation(bandwidth=sp2.bandwidth, power=sp2.power,
-                           freq=f, resolution=s, s_relaxed=s_hat, T=T)
-        history.append(dict(
-            iter=k,
-            objective=float(en.objective(sys, w, acc, alloc)),
-            energy=float(en.total_energy(sys, alloc)),
-            time=float(en.total_time(sys, alloc)),
-            accuracy=float(en.total_accuracy(acc, alloc)),
-            sp2_iters=sp2.iters, sp2_residual=sp2.residual,
-        ))
-        cur = alloc.flat()
-        rel = float(jnp.linalg.norm(cur - prev) / jnp.maximum(jnp.linalg.norm(prev), 1e-12))
-        prev = cur
-        if rel <= tol:
-            converged = True
-            break
-    return BCDResult(allocation=alloc,
+    alloc0 = init if init is not None else initial_allocation(sys)
+    state0 = _init_carry_state(sys, alloc0)
+    warr = jnp.asarray([w.w1, w.w2, w.rho], state0[0].dtype)
+    B, p, f, s, s_hat, T, iters, conv, ledger = _allocate_impl(
+        sys, warr, acc, state0, max_iters, tol, sp2_method, sp2_iters)
+    iters = int(iters)
+    history = _materialize_history(np.asarray(ledger), iters, _LEDGER_COLS)
+    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
+                            s_relaxed=s_hat, T=T) if iters else alloc0
+    return BCDResult(allocation=allocation,
                      objective=history[-1]["objective"] if history else float("nan"),
-                     history=history, iters=k, converged=converged)
+                     history=history, iters=iters, converged=bool(conv))
 
 
 def _optimal_split(sys: SystemParams, s: Array, bandwidth: Array,
-                   T_round: float, iters: int = 48) -> Array:
+                   T_round: Array, iters: int = 48) -> Array:
     """Per-device golden-section over the transmission-time share tt of the
     round deadline:  E(tt) = kappa cyc^3 / (T-tt)^2 + E_trans_min(tt | B),
     both terms convex. Returns tt* clipped to the feasible window."""
-    gold = 0.6180339887498949
     cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
 
     def energy(tt):
@@ -105,15 +208,44 @@ def _optimal_split(sys: SystemParams, s: Array, bandwidth: Array,
         bandwidth * jnp.log2(1.0 + sys.gain * sys.p_max
                              / (sys.noise_psd * jnp.maximum(bandwidth, 1e-9))),
         1e-12)
-    a = jnp.minimum(tt_min, 0.95 * T_round)
-    b = jnp.full_like(a, 0.95 * T_round)
-    for _ in range(iters):
-        c = b - gold * (b - a)
-        d = a + gold * (b - a)
-        left = energy(c) < energy(d)
-        a = jnp.where(left, a, c)
-        b = jnp.where(left, d, b)
-    return jnp.clip(0.5 * (a + b), tt_min, 0.95 * T_round)
+    a0 = jnp.minimum(tt_min, 0.95 * T_round)
+    b0 = jnp.broadcast_to(jnp.asarray(0.95 * T_round, a0.dtype), a0.shape)
+    tt = _golden_argmin(energy, a0, b0, iters=iters)
+    return jnp.clip(tt, tt_min, 0.95 * T_round)
+
+
+@partial(jax.jit, static_argnames=("acc", "max_iters"))
+def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
+                         T_round, state0, max_iters: int, tol):
+    """Device-resident deadline-constrained BCD (Figs. 8-9 variant)."""
+    dtype = state0[0].dtype
+
+    def step(state):
+        B, p, _, _, s_hat, _ = state
+        tt = sys.bits / jnp.maximum(_rate(sys, B, p), 1e-12)
+        f, s = _solve_sp1_fixed_impl(sys, warr, acc, tt, T_round)
+        # Break the BCD split deadlock: with a hard deadline, SP1 pins
+        # t_cmp = T - t_trans(current p, B), so SP2's rate floor equals the
+        # current rate and (p, B) can never move. Re-derive the floor from the
+        # per-device OPTIMAL compute/transmit split (convex in t_trans:
+        # E_cmp = kappa cyc^3/(T-tt)^2 rises, E_trans falls; golden section).
+        tt_opt = _optimal_split(sys, s, B, T_round)
+        rmin = sys.bits / tt_opt
+        p_new, B_new = _sp2_direct_impl(sys, rmin)
+        # recompute f against the achieved transmission time
+        tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
+        cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
+        f = jnp.clip(cyc / jnp.maximum(T_round - tt_new, 1e-9),
+                     sys.f_min, sys.f_max)
+        alloc = Allocation(bandwidth=B_new, power=p_new, freq=f, resolution=s,
+                           T=jnp.asarray(T_round, dtype))
+        metrics = (en.total_energy(sys, alloc),
+                   en.total_time(sys, alloc),
+                   en.total_accuracy(acc, alloc))
+        return (B_new, p_new, f, s, s_hat,
+                jnp.asarray(T_round, dtype)), metrics
+
+    return _bcd_while(state0, max_iters, len(_FIXED_COLS), tol, step)
 
 
 def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
@@ -126,40 +258,69 @@ def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
     acc = acc if acc is not None else default_accuracy()
     w = w.normalized()
     T_round = T_total / sys.global_rounds
-    alloc = init if init is not None else initial_allocation(sys, bandwidth_frac=bandwidth_frac)
-    history: List[dict] = []
-    prev = alloc.flat()
-    converged = False
-    k = 0
-    for k in range(1, max_iters + 1):
-        f, s = solve_sp1_fixed_T(sys, w, acc, alloc.bandwidth, alloc.power, T_round)
-        # Break the BCD split deadlock: with a hard deadline, SP1 pins
-        # t_cmp = T - t_trans(current p, B), so SP2's rate floor equals the
-        # current rate and (p, B) can never move. Re-derive the floor from the
-        # per-device OPTIMAL compute/transmit split (convex in t_trans:
-        # E_cmp = kappa cyc^3/(T-tt)^2 rises, E_trans falls; golden section).
-        tt_opt = _optimal_split(sys, s, alloc.bandwidth, float(T_round))
-        rmin = sys.bits / tt_opt
-        p_new, B_new = solve_sp2_direct(sys, rmin)
-        # recompute f against the achieved transmission time
-        from .energy import rate as _rate
-        tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
-        cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
-        f = jnp.clip(cyc / jnp.maximum(T_round - tt_new, 1e-9),
-                     sys.f_min, sys.f_max)
-        alloc = Allocation(bandwidth=B_new, power=p_new,
-                           freq=f, resolution=s, T=jnp.asarray(T_round))
-        history.append(dict(
-            iter=k,
-            energy=float(en.total_energy(sys, alloc)),
-            time=float(en.total_time(sys, alloc)),
-            accuracy=float(en.total_accuracy(acc, alloc)),
-        ))
-        cur = alloc.flat()
-        rel = float(jnp.linalg.norm(cur - prev) / jnp.maximum(jnp.linalg.norm(prev), 1e-12))
-        prev = cur
-        if rel <= tol:
-            converged = True
-            break
-    return BCDResult(allocation=alloc, objective=history[-1]["energy"],
-                     history=history, iters=k, converged=converged)
+    alloc0 = init if init is not None else initial_allocation(
+        sys, bandwidth_frac=bandwidth_frac)
+    state0 = _init_carry_state(sys, alloc0)
+    dtype = state0[0].dtype
+    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
+    B, p, f, s, s_hat, T, iters, conv, ledger = _allocate_fixed_impl(
+        sys, warr, acc, jnp.asarray(T_round, dtype), state0, max_iters, tol)
+    iters = int(iters)
+    history = _materialize_history(np.asarray(ledger), iters, _FIXED_COLS)
+    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
+                            T=T) if iters else alloc0
+    return BCDResult(allocation=allocation,
+                     objective=history[-1]["energy"] if history else float("nan"),
+                     history=history, iters=iters, converged=bool(conv))
+
+
+# ----------------------------------------------------------------------------
+# Fleet-scale batched allocation (beyond paper): one vmap'd BCD solve across
+# C independent base-station cells — the ROADMAP path to millions of clients.
+# ----------------------------------------------------------------------------
+
+def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
+    """Stack per-cell SystemParams into one batched pytree with (C, N) leaves.
+    All cells must share the scalar configuration (the pytree aux data)."""
+    from .types import _SYS_SCALARS
+
+    aux = tuple(getattr(systems[0], k) for k in _SYS_SCALARS)
+    for s_ in systems[1:]:
+        if tuple(getattr(s_, k) for k in _SYS_SCALARS) != aux:
+            raise ValueError("stack_systems: cells differ in scalar config")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *systems)
+
+
+def allocate_fleet(sys_batch: SystemParams, w: Weights,
+                   acc: Optional[AccuracyModel] = None,
+                   max_iters: int = 20, tol: float = 1e-6,
+                   sp2_iters: int = 30,
+                   sp2_method: str = "direct") -> FleetResult:
+    """Batched Algorithm 2: `vmap` of the jitted BCD loop across cells.
+
+    sys_batch: a SystemParams whose per-device leaves are (C, N) — build it
+    with `stack_systems` or `make_fleet`. Everything stays on device; one
+    call solves all C cells (64 cells x 2048 devices is a single XLA
+    program, no Python loop).
+    """
+    acc = acc if acc is not None else default_accuracy()
+    w = w.normalized()
+    dtype = jnp.asarray(sys_batch.gain).dtype
+    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
+
+    def one_cell(sysc):
+        state0 = _init_carry_state(sysc, initial_allocation(sysc))
+        return _allocate_impl(sysc, warr, acc, state0, max_iters, tol,
+                              sp2_method, sp2_iters)
+
+    B, p, f, s, s_hat, T, iters, conv, ledger = jax.vmap(one_cell)(sys_batch)
+    if max_iters > 0:
+        idx = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
+        last = jnp.take_along_axis(ledger[..., 0], idx[:, None], axis=1)[:, 0]
+        objective = jnp.where(iters > 0, last, jnp.nan)
+    else:
+        objective = jnp.full(iters.shape, jnp.nan, dtype)
+    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
+                            s_relaxed=s_hat, T=T)
+    return FleetResult(allocation=allocation, objective=objective,
+                       iters=iters, converged=conv, history=ledger)

@@ -77,3 +77,14 @@ def make_system(key: jax.Array, n_devices: int | None = None, **overrides) -> Sy
         resolutions=tuple(float(s) for s in cfg["resolutions"]),
         s_standard=float(cfg["s_standard"]),
     )
+
+
+def make_fleet(key: jax.Array, n_cells: int, n_devices: int,
+               **overrides) -> SystemParams:
+    """C independent cells drawn with the §VII-A parameterization, stacked
+    into one batched SystemParams with (C, N) leaves for `allocate_fleet`."""
+    from .bcd import stack_systems
+
+    keys = jax.random.split(key, n_cells)
+    return stack_systems([make_system(k, n_devices=n_devices, **overrides)
+                          for k in keys])

@@ -241,31 +241,56 @@ def solve_sp2_direct(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
     return _sp2_direct_impl(sys, rmin)
 
 
+def _thm2_dual_mu(sys: SystemParams, j: Array, rmin: Array,
+                  n_mu: int = 128, refine: int = 3) -> Array:
+    """Root of g'(mu) (A.23) by a batched grid sweep through the waterfill
+    kernel: each round evaluates n_mu candidate multipliers in one device
+    pass and re-grids geometrically inside the sign-change bracket. Replaces
+    the former 200-step bracket expansion + 96 scalar `float(gprime(mid))`
+    bisections (hundreds of host syncs) with `1 + refine` batched sweeps."""
+    from ..kernels import ops as kops
+
+    B_total = float(sys.bandwidth_total)
+    # g'(mu) is strictly decreasing; mu -> 0+ gives W -> -1 (g' -> +inf).
+    # For mu >> j, W+1 ~ ln(mu/j), so the root satisfies
+    #   ln(mu*/j) ~ sum(rmin) ln2 / B_total;
+    # size the bracket from that estimate (+10 nats for the -lnln(z) slack) —
+    # tight deadlines can push the root arbitrarily high, which a fixed cap
+    # would silently miss. Clamp so both hi and the kernel's in-lane ratio
+    # q = mu/j stay finite in the dtype the sweep COMPUTES in (f32 on TPU,
+    # regardless of j.dtype — see kernels.ops.waterfill_compute_dtype).
+    cd = kops.waterfill_compute_dtype(j.dtype)
+    lo = jnp.asarray(1e-30, j.dtype)
+    base = 2.0 * jnp.max(j) + 1.0
+    nats = jnp.sum(rmin) * jnp.log(2.0) / max(B_total, 1e-30) + 10.0
+    logmax = 0.9 * float(np.log(float(jnp.finfo(cd).max)))
+    cap = logmax + jnp.minimum(jnp.log(jnp.min(j)), 0.0) - jnp.log(base)
+    hi = base * jnp.exp(jnp.minimum(nats, cap))
+    g_lo = g_hi = None
+    for _ in range(1 + refine):
+        grid = jnp.geomspace(lo, hi, n_mu)
+        g = kops.waterfill_gprime(grid, j, rmin, B_total)
+        neg = g < 0.0
+        idx = jnp.where(jnp.any(neg), jnp.maximum(jnp.argmax(neg), 1), n_mu - 1)
+        lo, hi = grid[idx - 1], grid[idx]
+        g_lo, g_hi = g[idx - 1], g[idx]
+    # secant interpolation on the final bracket
+    t = jnp.clip(g_lo / jnp.maximum(g_lo - g_hi, 1e-30), 0.0, 1.0)
+    return (lo + t * (hi - lo)).astype(j.dtype)
+
+
 def solve_sp2_v2_thm2(sys: SystemParams, w: Weights, nu: Array, beta: Array,
                       rmin: Array) -> Tuple[Array, Array]:
     """Paper-literal Appendix-D path: Lambert-W dual (A.22/A.23) + Theorem 2.
-    Exact when every device's rate constraint is tight (tau_n > 0)."""
+    Exact when every device's rate constraint is tight (tau_n > 0).
+
+    The dual multiplier search runs through the batched
+    `kernels.ops.waterfill_gprime` sweep (Pallas on TPU, the ref oracle on
+    CPU) — fully device-resident, jit/vmap-compatible, no host syncs."""
     rmin = _clamp_rmin(sys, rmin)
     g_lin, d, N0 = sys.gain, sys.bits, sys.noise_psd
     j = nu * d * N0 / g_lin
-
-    def gprime(mu):
-        wv = lambertw0((mu - j) / (jnp.e * j))
-        return jnp.sum(rmin * jnp.log(2.0) / jnp.maximum(wv + 1.0, 1e-12)) \
-            - sys.bandwidth_total
-
-    mu_lo, mu_hi = jnp.asarray(1e-30), jnp.asarray(float(jnp.max(j)) * 2.0 + 1.0)
-    for _ in range(200):
-        if float(gprime(mu_hi)) < 0.0:
-            break
-        mu_hi = mu_hi * 4.0
-    for _ in range(96):
-        mid = 0.5 * (mu_lo + mu_hi)
-        if float(gprime(mid)) > 0.0:
-            mu_lo = mid
-        else:
-            mu_hi = mid
-    mu = 0.5 * (mu_lo + mu_hi)
+    mu = _thm2_dual_mu(sys, j, rmin)
 
     W = lambertw0((mu - j) / (jnp.e * j))
     a_val = jnp.where(jnp.abs(W) > 1e-12,
@@ -275,9 +300,10 @@ def solve_sp2_v2_thm2(sys: SystemParams, w: Weights, nu: Array, beta: Array,
     a = nu * beta + tau
     Lam = jnp.maximum(a * g_lin / (N0 * d * nu * jnp.log(2.0)), 1.0 + 1e-12)
     B_opt = rmin / jnp.log2(Lam)                         # Theorem 2, tight branch
-    total = float(jnp.sum(B_opt))
-    if total > sys.bandwidth_total:
-        B_opt = B_opt * sys.bandwidth_total / total
+    total = jnp.sum(B_opt)
+    B_opt = jnp.where(total > sys.bandwidth_total,
+                      B_opt * (sys.bandwidth_total / jnp.maximum(total, 1e-30)),
+                      B_opt)
     p_opt = jnp.clip((Lam - 1.0) * N0 * B_opt / g_lin, sys.p_min, sys.p_max)
     return p_opt, B_opt
 
@@ -296,11 +322,73 @@ class SP2Result:
     residual: float
 
 
-def _phi_norm(sys: SystemParams, w: Weights, p, B, beta, nu) -> float:
+def _phi_norm(sys: SystemParams, w1, p, B, beta, nu) -> Array:
     rate_ = G(sys, p, B)
     phi1 = -p * sys.bits + beta * rate_            # eq. (24)
-    phi2 = -w.w1 * sys.global_rounds + nu * rate_  # eq. (25)
-    return float(jnp.linalg.norm(jnp.concatenate([phi1, phi2])))
+    phi2 = -w1 * sys.global_rounds + nu * rate_    # eq. (25)
+    return jnp.linalg.norm(jnp.concatenate([phi1, phi2]))
+
+
+def _sp2_jong_core(sys: SystemParams, w1, rmin: Array, p0: Array, B0: Array,
+                   max_iters: int, xi=0.5, eps=0.01, tol=1e-9, damping=0.5):
+    """Traceable body of Algorithm 1 (callable from inside jitted BCD loops).
+    Returns (p, B, nu, beta, iters, residual) — all on device."""
+    from jax import lax
+
+    rate0 = jnp.maximum(G(sys, p0, B0), 1e-9)
+    nu0 = w1 * sys.global_rounds / rate0           # step 2
+    beta0 = p0 * sys.bits / rate0
+    res0 = _phi_norm(sys, w1, p0, B0, beta0, nu0)
+    scale = jnp.maximum(jnp.linalg.norm(sys.bits * sys.p_max)
+                        + w1 * sys.global_rounds * np.sqrt(sys.n), 1.0)
+
+    def cond(c):
+        _, _, _, _, it, _, done = c
+        return (~done) & (it < max_iters)
+
+    def body(c):
+        p, B, beta, nu, it, _, _ = c
+        p_new, B_new = _sp2_v2_impl(sys, nu, beta, rmin)  # step 4 (exact solve)
+        p = damping * p + (1.0 - damping) * p_new
+        B = damping * B + (1.0 - damping) * B_new
+        rate_ = jnp.maximum(G(sys, p, B), 1e-9)
+        sigma1 = p * sys.bits / rate_ - beta          # eq. (29)
+        sigma2 = w1 * sys.global_rounds / rate_ - nu
+        # Algorithm 1 terminates when phi -> 0 at the freshly solved (p, B)
+        # (a full Newton step makes the post-update residual 0 by construction).
+        res = _phi_norm(sys, w1, p, B, beta, nu)
+        done = res <= tol * scale
+
+        def bt_cond(sc):                              # backtracking rule (28)
+            _, found, i = sc
+            return (~found) & (i < 30)
+
+        def bt(sc):
+            step, _, i = sc
+            cand = _phi_norm(sys, w1, p, B, beta + step * sigma1,
+                             nu + step * sigma2)
+            ok = cand <= (1.0 - eps * step) * res
+            return jnp.where(ok, step, step * xi), ok, i + 1
+
+        # seeding found=done skips the line search when the outer loop is
+        # about to terminate (the duals are frozen below anyway)
+        step, _, _ = lax.while_loop(bt_cond, bt, (jnp.ones((), p.dtype),
+                                                  done, jnp.zeros((), jnp.int32)))
+        beta = jnp.where(done, beta, beta + step * sigma1)   # eq. (30)
+        nu = jnp.where(done, nu, nu + step * sigma2)
+        return p, B, beta, nu, it + 1, res, done
+
+    p, B, beta, nu, it, res, _ = lax.while_loop(
+        cond, body, (p0, B0, beta0, nu0, jnp.zeros((), jnp.int32), res0,
+                     jnp.zeros((), bool)))
+    return p, B, nu, beta, it, res
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def _sp2_jong_impl(sys: SystemParams, w1, rmin: Array, p0: Array, B0: Array,
+                   max_iters: int, xi, eps, tol, damping):
+    return _sp2_jong_core(sys, w1, rmin, p0, B0, max_iters,
+                          xi=xi, eps=eps, tol=tol, damping=damping)
 
 
 def solve_sp2(sys: SystemParams, w: Weights, rmin: Array,
@@ -314,33 +402,12 @@ def solve_sp2(sys: SystemParams, w: Weights, rmin: Array,
     makes the undamped fixed point oscillate between vertex allocations; a
     0.5 relaxation restores convergence while preserving the fixed points.
     The globally exact `solve_sp2_direct` is used as the oracle in tests.
+
+    The whole iteration is one jitted `lax.while_loop` — no per-iteration
+    host syncs (see `_sp2_jong_core` for the traceable form used by BCD).
     """
-    p, B = p0, B0
-    rate_ = jnp.maximum(G(sys, p, B), 1e-9)
-    nu = w.w1 * sys.global_rounds / rate_          # step 2
-    beta = p * sys.bits / rate_
-    it = 0
-    res = _phi_norm(sys, w, p, B, beta, nu)
-    scale = float(jnp.linalg.norm(sys.bits * sys.p_max)) \
-        + w.w1 * sys.global_rounds * float(np.sqrt(sys.n))
-    for it in range(1, max_iters + 1):
-        p_new, B_new = solve_sp2_v2(sys, w, nu, beta, rmin)  # step 4 (exact convex solve)
-        p = damping * p + (1.0 - damping) * p_new
-        B = damping * B + (1.0 - damping) * B_new
-        rate_ = jnp.maximum(G(sys, p, B), 1e-9)
-        sigma1 = p * sys.bits / rate_ - beta          # eq. (29)
-        sigma2 = w.w1 * sys.global_rounds / rate_ - nu
-        # Algorithm 1 terminates when phi -> 0 at the freshly solved (p, B)
-        # (a full Newton step makes the post-update residual 0 by construction).
-        res = _phi_norm(sys, w, p, B, beta, nu)
-        if res <= tol * max(1.0, scale):
-            break
-        step = 1.0                                    # backtracking rule (28)
-        for _ in range(30):
-            cand = _phi_norm(sys, w, p, B, beta + step * sigma1, nu + step * sigma2)
-            if cand <= (1.0 - eps * step) * res:
-                break
-            step *= xi
-        beta = beta + step * sigma1                   # eq. (30)
-        nu = nu + step * sigma2
-    return SP2Result(power=p, bandwidth=B, nu=nu, beta=beta, iters=it, residual=res)
+    p, B, nu, beta, it, res = _sp2_jong_impl(
+        sys, jnp.asarray(w.w1, p0.dtype), rmin, p0, B0, max_iters,
+        xi, eps, tol, damping)
+    return SP2Result(power=p, bandwidth=B, nu=nu, beta=beta,
+                     iters=int(it), residual=float(res))

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.ref import waterfill_gprime_ref as _waterfill_ref
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
 from repro.kernels.waterfill import waterfill_gprime as _waterfill
 
@@ -46,7 +47,45 @@ def mamba_scan(dt, A, Bt, Ct, x, *, chunk: int = 64, block_d: int = 256):
                   interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("B_total", "block_n"))
-def waterfill_gprime(mu, j, rmin, B_total: float, *, block_n: int = 1024):
+def waterfill_compute_dtype(input_dtype):
+    """Dtype the dual sweep actually computes in: f32 on TPU (no f64 on the
+    VPU, and interpret mode still lowers through TPU XLA), the input dtype
+    elsewhere. Callers sizing search brackets (core.sp2._thm2_dual_mu) must
+    respect this, not the input dtype — an f64-sized bracket overflows the
+    f32 kernel to NaN."""
+    if jax.default_backend() == "tpu":
+        return jnp.dtype(jnp.float32)
+    return jnp.dtype(input_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("B_total", "block_n", "impl",
+                                             "dtype"))
+def _waterfill_dispatch(mu, j, rmin, B_total: float, *, block_n: int,
+                        impl: str, dtype):
+    if impl == "ref":
+        return _waterfill_ref(mu.astype(dtype), j.astype(dtype),
+                              rmin.astype(dtype), B_total)
     return _waterfill(mu, j, rmin, B_total, block_n=block_n,
-                      interpret=_interpret())
+                      interpret=_interpret(), dtype=dtype)
+
+
+def waterfill_gprime(mu, j, rmin, B_total: float, *, block_n: int = 1024,
+                     impl: str = "auto"):
+    """Production entry for the SP2 dual sweep (used by `core.sp2`).
+
+    impl: "auto" — native Pallas on TPU, the pure-jnp ref oracle on CPU
+          (full input precision, no interpret-mode overhead); setting
+          REPRO_FORCE_INTERPRET=1 routes "auto" through the interpret-mode
+          kernel body instead.  "pallas" / "ref" force a path explicitly.
+    "auto" is resolved here, outside the jit cache, so flipping the env var
+    between calls takes effect (it becomes the static `impl` cache key).
+    Computes in `waterfill_compute_dtype(mu.dtype)`.
+    """
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
+    if impl == "auto":
+        impl = "pallas" if (jax.default_backend() == "tpu"
+                            or os.environ.get("REPRO_FORCE_INTERPRET")) else "ref"
+    return _waterfill_dispatch(mu, j, rmin, B_total, block_n=block_n,
+                               impl=impl,
+                               dtype=waterfill_compute_dtype(mu.dtype))

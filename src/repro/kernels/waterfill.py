@@ -6,6 +6,13 @@ AR clients per base-station region). Grid (N/bn,), VMEM block of device
 parameters, Lambert-W by Halley iteration on VREGs, partial sums accumulated
 into the (M,) output across sequential grid steps.
 
+Numerics: the Lambert argument z = (mu - j)/(e j) sits right at the branch
+point -1/e when mu << j, where forming e*z + 1 loses all significant bits to
+cancellation. The kernel therefore works with the cancellation-free ratio
+q = mu / j (so e*z + 1 == q exactly) and seeds the branch-point series with
+p = sqrt(2 q). Any N is accepted: the tail block is padded with (j=1,
+rmin=0) lanes whose summand rmin ln2/(W+1) is exactly 0.
+
 Oracle: kernels.ref.waterfill_gprime_ref.
 """
 from __future__ import annotations
@@ -17,52 +24,76 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _lambertw_vec(z, iters: int = 24):
-    zc = jnp.maximum(z, -0.36787944117144233)
-    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * zc + 1.0), 0.0))
-    w_branch = -1.0 + p - p * p / 3.0 + 11.0 * p ** 3 / 72.0
-    lz = jnp.log(jnp.maximum(zc, 1e-300))
-    llz = jnp.log(jnp.maximum(lz, 1e-300))
-    w_big = lz - llz + llz / jnp.maximum(lz, 1e-12)
+def _lambertw_vec(q, iters: int = 24):
+    """W0(z) for z = (q - 1)/e, q >= 0 — branch-point-stable in f32.
+
+    Clamps respect the compute dtype: an f32 lane at z ~ -1/e would
+    otherwise round W to exactly -1, making Halley's wp1 divisor 0 (-> NaN).
+    """
+    dt = q.dtype
+    eps = jnp.asarray(jnp.finfo(dt).eps, dt)
+    tiny = jnp.asarray(jnp.finfo(dt).tiny, dt)
+    qc = jnp.maximum(q, 0.0)
+    zc = (qc - 1.0) / jnp.e
+    # branch-point series in p = sqrt(2(e z + 1)) = sqrt(2 q)  (no cancellation)
+    p = jnp.sqrt(2.0 * qc)
+    w_branch = -1.0 + p * (1.0 - p / 3.0 + 11.0 * p * p / 72.0
+                           - 43.0 * p * p * p / 540.0)
+    lz = jnp.log(jnp.maximum(zc, tiny))
+    llz = jnp.log(jnp.maximum(lz, tiny))
+    w_big = lz - llz + llz / jnp.maximum(lz, eps)
     w_small = zc * (1.0 - zc + 1.5 * zc * zc)
     w = jnp.where(zc < -0.25, w_branch, jnp.where(zc > 3.0, w_big, w_small))
-    w = jnp.maximum(w, -1.0 + 1e-12)
+    w = jnp.maximum(w, -1.0 + eps)
     for _ in range(iters):
         ew = jnp.exp(w)
         f = w * ew - zc
         wp1 = w + 1.0
         denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
-        w = jnp.maximum(w - f / jnp.where(jnp.abs(denom) < 1e-300, 1e-300, denom),
-                        -1.0 + 1e-15)
-    return w
+        w = jnp.maximum(w - f / jnp.where(jnp.abs(denom) < tiny, tiny, denom),
+                        -1.0 + eps)
+    # Halley's f = w e^w - z cancels catastrophically near the branch point;
+    # there the p-series is the accurate evaluation, so keep it.
+    return jnp.where(qc < 1e-3, w_branch, w)
 
 
-def _waterfill_kernel(mu_ref, j_ref, rmin_ref, out_ref):
+def _waterfill_kernel(mu_ref, j_ref, rmin_ref, out_ref, *, dtype):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    mu = mu_ref[...].astype(jnp.float32)       # (M,)
-    j = j_ref[...].astype(jnp.float32)         # (bn,)
-    rmin = rmin_ref[...].astype(jnp.float32)   # (bn,)
-    z = (mu[:, None] - j[None, :]) / (jnp.e * j[None, :])   # (M, bn)
-    w = _lambertw_vec(z)
+    mu = mu_ref[...].astype(dtype)       # (M,)
+    j = j_ref[...].astype(dtype)         # (bn,)
+    rmin = rmin_ref[...].astype(dtype)   # (bn,)
+    q = mu[:, None] / j[None, :]         # (M, bn): e z + 1, exactly
+    w = _lambertw_vec(q)
     part = jnp.sum(rmin[None, :] * jnp.log(2.0)
-                   / jnp.maximum(w + 1.0, 1e-12), axis=1)   # (M,)
-    out_ref[...] += part
+                   / jnp.maximum(w + 1.0, jnp.finfo(dtype).eps ** 2), axis=1)
+    out_ref[...] += part.astype(out_ref.dtype)
 
 
 def waterfill_gprime(mu: jax.Array, j: jax.Array, rmin: jax.Array,
                      B_total: float, *, block_n: int = 1024,
-                     interpret: bool = False) -> jax.Array:
-    """g'(mu) per candidate: mu (M,), j/rmin (N,) -> (M,). N % block_n == 0."""
+                     interpret: bool = False,
+                     dtype=jnp.float32) -> jax.Array:
+    """g'(mu) per candidate: mu (M,), j/rmin (N,) -> (M,). Any N: the tail
+    block is padded with (j=1, rmin=0) lanes, whose summand
+    rmin ln2 / (W+1) is exactly 0 — an implicit mask of the partial sum.
+
+    dtype: in-kernel compute/output dtype. f32 is the TPU-native default;
+    f64 is only meaningful in interpret mode (CPU parity checks).
+    """
     N = j.shape[0]
-    assert N % block_n == 0, (N, block_n)
+    rem = (-N) % block_n
+    if rem:
+        j = jnp.concatenate([j, jnp.ones((rem,), j.dtype)])
+        rmin = jnp.concatenate([rmin, jnp.zeros((rem,), rmin.dtype)])
+        N += rem
     M = mu.shape[0]
     sums = pl.pallas_call(
-        _waterfill_kernel,
+        functools.partial(_waterfill_kernel, dtype=dtype),
         grid=(N // block_n,),
         in_specs=[
             pl.BlockSpec((M,), lambda i: (0,)),
@@ -70,7 +101,7 @@ def waterfill_gprime(mu: jax.Array, j: jax.Array, rmin: jax.Array,
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((M,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((M,), dtype),
         interpret=interpret,
-    )(mu.astype(jnp.float32), j.astype(jnp.float32), rmin.astype(jnp.float32))
+    )(mu.astype(dtype), j.astype(dtype), rmin.astype(dtype))
     return sums - B_total

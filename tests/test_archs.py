@@ -12,6 +12,10 @@ from repro.models.transformer import (init_cache, init_model, lm_loss,
                                       model_forward, serve_step)
 from repro.optim import AdamW
 
+# full-architecture forward/train/decode sweeps: minutes of CPU, deselected
+# in the quick CI job via -m "not slow"
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

@@ -6,7 +6,11 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install: property tests degrade to skips
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (Allocation, Weights, allocate, allocate_fixed_deadline,
                         default_accuracy, feasible, initial_allocation,

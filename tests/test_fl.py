@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install: property tests degrade to skips
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import Weights, make_system
 from repro.fl import (fedavg, local_train, make_eval_set,
