@@ -208,14 +208,17 @@ def table_allocator_scaling():
 
 def fleet_scale():
     """Fleet allocation: one vmap'd BCD solve across C cells x N devices —
-    the allocate_fleet acceptance row (>= 64 cells x 2048 devices)."""
+    the allocate_fleet acceptance row (>= 64 cells x 2048 devices).
+    max_iters=8 is calibrated to the fleet regime: the BCD rel-step contracts
+    ~5x per iteration and hits the f32 convergence floor around iteration 6
+    (the old max_iters=3 could not converge any cell except by luck)."""
     C, N = 64, 2048
     key = jax.random.PRNGKey(31)
     fleet = make_fleet(key, n_cells=C, n_devices=N,
                        bandwidth_total=20e6 * N / 50)
     w = Weights(0.5, 0.5, 1.0)
     t0 = time.time()
-    res = allocate_fleet(fleet, w, max_iters=3)
+    res = allocate_fleet(fleet, w, max_iters=8)
     jax.block_until_ready(res.allocation.bandwidth)
     t1 = time.time()
     conv = int(jnp.sum(res.converged))
@@ -223,6 +226,40 @@ def fleet_scale():
          f"devices={C * N};cells_converged={conv}/{C};"
          f"mean_obj={float(jnp.mean(res.objective)):.4g};"
          f"wall_s={t1 - t0:.1f}")
+
+
+def sp1_sweep_scale():
+    """SP1 engines head-to-head: the batched T-grid dual sweep vs the nested
+    56x56 bisection oracle, one solve at region scale (per-iteration SP1 cost
+    inside the fleet BCD). Reports the wall-time ratio and the relative
+    deadline parity between the two engines."""
+    from repro.core.accuracy import default_accuracy
+    from repro.core.sp1 import solve_sp1
+
+    N = 1 << 15
+    key = jax.random.PRNGKey(41)
+    sysp = make_system(key, n_devices=N, bandwidth_total=20e6 * N / 50)
+    acc = default_accuracy()
+    w = Weights(0.5, 0.5, 1.0).normalized()
+    B = jnp.full((N,), sysp.bandwidth_total / N)
+    p = jnp.full((N,), sysp.p_max)
+
+    walls, T_by = {}, {}
+    for method in ("sweep", "bisect"):
+        out = solve_sp1(sysp, w, acc, B, p, method=method)   # compile
+        jax.block_until_ready(out[0])
+        t0 = time.time()
+        out = solve_sp1(sysp, w, acc, B, p, method=method)
+        jax.block_until_ready(out[0])
+        walls[method] = time.time() - t0
+        T_by[method] = float(out[3])
+    rel = abs(T_by["sweep"] - T_by["bisect"]) / abs(T_by["bisect"])
+    t0 = time.time()
+    _row(f"sp1_sweep.N{N}", t0, t0 + walls["sweep"],
+         f"sweep_ms={1e3 * walls['sweep']:.1f};"
+         f"bisect_ms={1e3 * walls['bisect']:.1f};"
+         f"speedup={walls['bisect'] / max(walls['sweep'], 1e-9):.1f}x;"
+         f"T_rel_err={rel:.2e}")
 
 
 def roofline_table():
@@ -284,6 +321,7 @@ BENCHES = {
     "fig9": fig9_vs_scheme1,
     "scaling": table_allocator_scaling,
     "fleet": fleet_scale,
+    "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,
     "roofline": roofline_table,
 }

@@ -21,7 +21,7 @@ from jax import lax
 from . import energy as en
 from .accuracy import AccuracyModel, default_accuracy
 from .energy import rate as _rate
-from .sp1 import _solve_sp1_fixed_impl, _solve_sp1_impl
+from .sp1 import _SP1_IMPLS, _solve_sp1_fixed_impl
 from .sp2 import _golden_argmin, _sp2_direct_impl, _sp2_jong_core, r_min
 from .types import Allocation, SystemParams, Weights
 
@@ -84,11 +84,18 @@ def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
     relative (B, p, f, s) step, one `lax.while_loop`. `step(state)` performs
     one block-coordinate update and returns (new_state, metric scalars); the
     driver appends the rel-step column and writes the ledger row.
+
+    The tolerance is floored at 64 ulps of the carry dtype: in f32 the
+    iterate movement plateaus around ~10 eps (solver bracketing noise, not
+    progress), so the old raw tol=1e-6 sat exactly at the noise floor and
+    fleet cells reported "not converged" forever — the 12/64 fleet
+    convergence-rate bug. Movement below the floor is numerical noise.
     Returns (*state, iters, converged, ledger)."""
     dtype = state0[0].dtype
     ledger0 = jnp.full((max_iters, ncols), jnp.nan, dtype)
     if max_iters == 0:   # nothing to iterate: return the start point untouched
         return (*state0, jnp.zeros((), jnp.int32), jnp.zeros((), bool), ledger0)
+    tol = jnp.maximum(jnp.asarray(tol, dtype), 64.0 * jnp.finfo(dtype).eps)
     prev0 = jnp.concatenate([state0[0], state0[1], state0[2], state0[3]])
 
     def cond(c):
@@ -112,20 +119,21 @@ def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
     return (*state, k, conv, ledger)
 
 
-@partial(jax.jit, static_argnames=("acc", "max_iters", "sp2_method",
-                                   "sp2_iters"))
+@partial(jax.jit, static_argnames=("acc", "max_iters", "sp1_method",
+                                   "sp2_method", "sp2_iters"))
 def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                    state0, max_iters: int, tol,
-                   sp2_method: str, sp2_iters: int):
+                   sp1_method: str, sp2_method: str, sp2_iters: int):
     """Device-resident Algorithm 2. Returns
     (B, p, f, s, s_hat, T, iters, converged, ledger)."""
     dtype = state0[0].dtype
     warr_sp1 = jnp.stack([warr[0], jnp.maximum(warr[1], 1e-9), warr[2]])
+    solve_sp1 = _SP1_IMPLS[sp1_method]
 
     def step(state):
         B, p, _, _, _, _ = state
         tt = sys.bits / jnp.maximum(_rate(sys, B, p), 1e-12)
-        f, s, s_hat, T = _solve_sp1_impl(sys, warr_sp1, acc, tt)
+        f, s, s_hat, T = solve_sp1(sys, warr_sp1, acc, tt)
         rmin = r_min(sys, f, s, T)
         if sp2_method == "direct":
             p_new, B_new = _sp2_direct_impl(sys, rmin)
@@ -163,9 +171,12 @@ def _materialize_history(ledger: np.ndarray, iters: int,
 def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
              max_iters: int = 20, tol: float = 1e-6,
              init: Optional[Allocation] = None,
-             sp2_iters: int = 30, sp2_method: str = "direct") -> BCDResult:
+             sp2_iters: int = 30, sp2_method: str = "direct",
+             sp1_method: str = "sweep") -> BCDResult:
     """Algorithm 2: alternate SP1 (f, s, T) and SP2 (p, B) until convergence.
 
+    sp1_method: "sweep" (batched T-grid dual sweep, the default) or "bisect"
+    (the original nested bisection, the sweep's parity oracle).
     sp2_method: "direct" (exact boundary-power convex solve, beyond-paper,
     the default engine) or "jong" (the paper's Algorithm 1 Newton-like loop).
     The whole BCD iteration compiles to one jitted computation; convergence
@@ -178,7 +189,8 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
     state0 = _init_carry_state(sys, alloc0)
     warr = jnp.asarray([w.w1, w.w2, w.rho], state0[0].dtype)
     B, p, f, s, s_hat, T, iters, conv, ledger = _allocate_impl(
-        sys, warr, acc, state0, max_iters, tol, sp2_method, sp2_iters)
+        sys, warr, acc, state0, max_iters, tol, sp1_method, sp2_method,
+        sp2_iters)
     iters = int(iters)
     history = _materialize_history(np.asarray(ledger), iters, _LEDGER_COLS)
     allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
@@ -280,14 +292,18 @@ def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
 # ----------------------------------------------------------------------------
 
 def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
-    """Stack per-cell SystemParams into one batched pytree with (C, N) leaves.
-    All cells must share the scalar configuration (the pytree aux data)."""
-    from .types import _SYS_SCALARS
+    """Stack per-cell SystemParams into one batched pytree: per-device arrays
+    become (C, N), per-cell scalars become (C,). Cells may differ in any
+    numeric scalar (bandwidth_total, p_max, ... are traced leaves), so mixed
+    cell classes batch through one vmap'd solve; only the static aux data —
+    the discrete resolution menu — must match across cells."""
+    from .types import _SYS_STATIC
 
-    aux = tuple(getattr(systems[0], k) for k in _SYS_SCALARS)
+    aux = tuple(getattr(systems[0], k) for k in _SYS_STATIC)
     for s_ in systems[1:]:
-        if tuple(getattr(s_, k) for k in _SYS_SCALARS) != aux:
-            raise ValueError("stack_systems: cells differ in scalar config")
+        if tuple(getattr(s_, k) for k in _SYS_STATIC) != aux:
+            raise ValueError(
+                "stack_systems: cells differ in static config (resolutions)")
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *systems)
 
 
@@ -295,13 +311,15 @@ def allocate_fleet(sys_batch: SystemParams, w: Weights,
                    acc: Optional[AccuracyModel] = None,
                    max_iters: int = 20, tol: float = 1e-6,
                    sp2_iters: int = 30,
-                   sp2_method: str = "direct") -> FleetResult:
+                   sp2_method: str = "direct",
+                   sp1_method: str = "sweep") -> FleetResult:
     """Batched Algorithm 2: `vmap` of the jitted BCD loop across cells.
 
-    sys_batch: a SystemParams whose per-device leaves are (C, N) — build it
-    with `stack_systems` or `make_fleet`. Everything stays on device; one
-    call solves all C cells (64 cells x 2048 devices is a single XLA
-    program, no Python loop).
+    sys_batch: a SystemParams whose per-device leaves are (C, N) and per-cell
+    scalars are (C,) — build it with `stack_systems` or `make_fleet`. Cells
+    may be heterogeneous (different bandwidth_total / p_max / ... per cell).
+    Everything stays on device; one call solves all C cells (64 cells x 2048
+    devices is a single XLA program, no Python loop).
     """
     acc = acc if acc is not None else default_accuracy()
     w = w.normalized()
@@ -311,7 +329,7 @@ def allocate_fleet(sys_batch: SystemParams, w: Weights,
     def one_cell(sysc):
         state0 = _init_carry_state(sysc, initial_allocation(sysc))
         return _allocate_impl(sysc, warr, acc, state0, max_iters, tol,
-                              sp2_method, sp2_iters)
+                              sp1_method, sp2_method, sp2_iters)
 
     B, p, f, s, s_hat, T, iters, conv, ledger = jax.vmap(one_cell)(sys_batch)
     if max_iters > 0:

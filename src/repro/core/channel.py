@@ -82,9 +82,28 @@ def make_system(key: jax.Array, n_devices: int | None = None, **overrides) -> Sy
 def make_fleet(key: jax.Array, n_cells: int, n_devices: int,
                **overrides) -> SystemParams:
     """C independent cells drawn with the §VII-A parameterization, stacked
-    into one batched SystemParams with (C, N) leaves for `allocate_fleet`."""
+    into one batched SystemParams with (C, N) array leaves and (C,) scalar
+    leaves for `allocate_fleet`.
+
+    Heterogeneous fleets: a scalar override given as a length-C sequence
+    (list/tuple/array) is distributed cell-by-cell, e.g.
+    ``make_fleet(key, 3, 64, bandwidth_total=[10e6, 20e6, 40e6])`` builds a
+    fleet of three different cell classes."""
     from .bcd import stack_systems
 
+    per_cell = {}
+    for k, v in list(overrides.items()):
+        if isinstance(v, (list, tuple, np.ndarray, jnp.ndarray)) \
+                and k != "resolutions" and jnp.ndim(v) > 0:
+            vals = list(v)
+            if len(vals) != n_cells:
+                raise ValueError(
+                    f"make_fleet: per-cell override {k!r} has {len(vals)} "
+                    f"entries for {n_cells} cells")
+            per_cell[k] = [float(x) for x in vals]
+            del overrides[k]
     keys = jax.random.split(key, n_cells)
-    return stack_systems([make_system(k, n_devices=n_devices, **overrides)
-                          for k in keys])
+    return stack_systems([
+        make_system(kc, n_devices=n_devices,
+                    **{k: v[c] for k, v in per_cell.items()}, **overrides)
+        for c, kc in enumerate(keys)])

@@ -9,11 +9,27 @@ KKT structure (paper eqs. A.2-A.7):
     s_hat_n*(lambda) solves  s * (2 a_n f^2 + 2 lambda q_n / f) = rho A_n'(s)
     sum_n lambda_n   = w2 Rg
 
-Instead of CVX on the dual (A.8) we solve the KKT system exactly by nested
-bisection ("water-filling"):
-  * inner: lambda_n(T) s.t. the per-device makespan T_n(lambda) = T
-           (T_n is strictly decreasing in lambda until the boxes clip);
-  * outer: T s.t. sum_n lambda_n(T) = w2 Rg.
+Instead of CVX on the dual (A.8) we solve the KKT system exactly by
+water-filling on the scalar map T -> Sigma_n lambda_n(T), where lambda_n(T)
+inverts the strictly decreasing per-device makespan T_n(lambda) (A.4/A.6
+with the box clips folded in) and the outer root Sigma_n lambda_n(T) = w2 Rg
+enforces the dual feasibility condition A.7. Two engines share that
+formulation:
+
+  * method="sweep" (default): a batched T-grid sweep — every round evaluates
+    Sigma_n lambda_n(T) for a whole grid of candidate deadlines in one
+    device pass through `kernels.ops.sp1_lambda_sum` (Pallas on TPU, the
+    pure-jnp ref oracle on CPU) and re-grids geometrically inside the
+    sign-change bracket, finishing with secant interpolation. For the
+    paper's LinearAccuracy the inner inversion lambda_n(T) is CLOSED FORM
+    (the clipping regimes of A.2/A.3 each invert exactly — see
+    `kernels.sp1_sweep.lambda_of_T_linear`), so one sweep costs O(grid) per
+    device instead of O(outer x inner) bisection steps; generic concave
+    accuracy models run the same sweep with a vmapped per-grid-point
+    bisection for lambda_n(T).
+  * method="bisect": the original nested bisection (inner lambda, outer T),
+    kept bit-stable as the parity oracle for the sweep.
+
 This supports any concave accuracy model A_n, not just the paper's linear
 special case (DESIGN.md §5). Fully jitted (lax.fori_loop bisections).
 """
@@ -35,6 +51,19 @@ _INNER_ITERS = 56
 _OUTER_ITERS = 56
 _S_ITERS = 48
 
+# T-grid sweep shape: `_SWEEP_ROUNDS` rounds of `_SWEEP_POINTS`-point grids
+# shrink the bracket by (points-1)^rounds; 3 x 16 resolves the ~18-nat
+# default [T_lo, T_hi] range to ~5e-3 relative before the secant step
+# (the objective is stationary in T at the root, so that is ~1e-8 relative
+# on the objective — see the parity tests).
+_SWEEP_POINTS = 16
+_SWEEP_ROUNDS = 3
+# generic (non-linear) accuracy models pay a full lambda-bisection per grid
+# point, so sweep a coarser grid over one extra round — same total bracket
+# reduction (11^4 > 15^3) at 48 instead of 64 bisection-backed evaluations
+_SWEEP_POINTS_GENERIC = 12
+_SWEEP_ROUNDS_GENERIC = 4
+
 
 def _coeffs(sys: SystemParams, w: Weights):
     """alpha_n (energy coeff, incl. w1 Rg) and q_n (cycles per s^2)."""
@@ -44,7 +73,11 @@ def _coeffs(sys: SystemParams, w: Weights):
 
 
 def _f_of_lambda(sys: SystemParams, w: Weights, lam: Array) -> Array:
-    f_unc = jnp.cbrt(lam / jnp.maximum(2.0 * w.w1 * sys.global_rounds * sys.kappa, 1e-300))
+    # dtype-aware guard: 1e-300 underflows to 0 in f32, and w1 == 0 (pure
+    # latency weighting) would make this cbrt(0/0) = NaN at lam = 0
+    tiny = jnp.finfo(jnp.asarray(lam).dtype).tiny
+    f_unc = jnp.cbrt(lam / jnp.maximum(
+        2.0 * w.w1 * sys.global_rounds * sys.kappa, tiny))
     return jnp.clip(f_unc, sys.f_min, sys.f_max)
 
 
@@ -55,7 +88,8 @@ def _s_of_lambda(sys: SystemParams, w: Weights, acc: AccuracyModel, lam: Array) 
     psi = 2.0 * alpha * f ** 2 + 2.0 * lam * q / jnp.maximum(f, 1e-9)
 
     if isinstance(acc, LinearAccuracy):
-        s_unc = w.rho * acc.slope / jnp.maximum(psi, 1e-300)
+        s_unc = w.rho * acc.slope / jnp.maximum(
+            psi, jnp.finfo(jnp.asarray(psi).dtype).tiny)
         return jnp.clip(s_unc, sys.s_lo, sys.s_hi)
 
     def h(s):  # increasing in s (A concave)
@@ -103,24 +137,42 @@ def _lambda_of_T(sys: SystemParams, w: Weights, acc: AccuracyModel,
 
 def round_resolution(sys: SystemParams, s_hat: Array) -> Array:
     """Discrete mapping of eq. (20): nearest resolution by midpoint thresholds."""
-    res = jnp.asarray(sys.resolutions)
+    # pin the static menu to the solve dtype: an f64 menu would silently
+    # promote s (and everything downstream, incl. the BCD while_loop carry)
+    # out of an f32 system's dtype
+    res = jnp.asarray(sys.resolutions, s_hat.dtype)
     idx = jnp.argmin(jnp.abs(s_hat[:, None] - res[None, :]), axis=1)
     return res[idx]
+
+
+def _sp1_bounds(sys: SystemParams, w: Weights, q: Array, tt: Array):
+    """(lam_hi, target, T_lo, T_hi) shared by both SP1 engines."""
+    lam_hi = jnp.maximum(jnp.maximum(
+        2.0 * w.w1 * sys.global_rounds * sys.kappa * sys.f_max ** 3,
+        w.w2 * sys.global_rounds), 1.0) * 1e4
+    target = w.w2 * sys.global_rounds
+    T_lo = jnp.max(q * sys.s_lo ** 2 / sys.f_max + tt) * (1.0 + 1e-12)
+    T_hi = jnp.max(q * sys.s_hi ** 2 / jnp.maximum(sys.f_min, 1e-3) + tt) * 2.0
+    return lam_hi, target, T_lo, jnp.asarray(T_hi, T_lo.dtype)
+
+
+def _finish_sp1(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                q: Array, lam: Array, tt: Array, T: Array):
+    f = _f_of_lambda(sys, w, lam)                      # eq. (19)
+    s_hat = _s_of_lambda(sys, w, acc, lam)
+    s = round_resolution(sys, s_hat)                   # eq. (20)
+    # makespan consistent with the discrete s (feeds SP2's r_min)
+    T_out = jnp.max(q * s ** 2 / jnp.maximum(f, 1e-9) + tt)
+    return f, s, s_hat, jnp.maximum(T, T_out)
 
 
 @partial(jax.jit, static_argnames=("acc",))
 def _solve_sp1_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                     tt: Array):
+    """Nested-bisection engine (method="bisect") — the sweep's parity oracle."""
     w = Weights(warr[0], warr[1], warr[2])
     _, q = _coeffs(sys, w)
-    lam_hi = jnp.maximum(jnp.maximum(
-        2.0 * w.w1 * sys.global_rounds * sys.kappa * sys.f_max ** 3,
-        w.w2 * sys.global_rounds), 1.0) * 1e4
-    target = w.w2 * sys.global_rounds
-
-    T_lo = jnp.max(q * sys.s_lo ** 2 / sys.f_max + tt) * (1.0 + 1e-12)
-    T_hi = jnp.max(q * sys.s_hi ** 2 / max(sys.f_min, 1e-3) + tt) * 2.0
-    T_hi = jnp.asarray(T_hi, T_lo.dtype)
+    lam_hi, target, T_lo, T_hi = _sp1_bounds(sys, w, q, tt)
 
     def body(_, carry):
         lo, hi = carry
@@ -131,25 +183,89 @@ def _solve_sp1_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
 
     lo, hi = lax.fori_loop(0, _OUTER_ITERS, body, (T_lo, T_hi))
     T = 0.5 * (lo + hi)
-
     lam = _lambda_of_T(sys, w, acc, T, tt, lam_hi)
-    f = _f_of_lambda(sys, w, lam)                      # eq. (19)
-    s_hat = _s_of_lambda(sys, w, acc, lam)
-    s = round_resolution(sys, s_hat)                   # eq. (20)
-    # makespan consistent with the discrete s (feeds SP2's r_min)
-    T_out = jnp.max(q * s ** 2 / jnp.maximum(f, 1e-9) + tt)
-    return f, s, s_hat, jnp.maximum(T, T_out)
+    return _finish_sp1(sys, w, acc, q, lam, tt, T)
+
+
+@partial(jax.jit, static_argnames=("acc",))
+def _solve_sp1_sweep_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
+                          tt: Array):
+    """Batched T-grid sweep engine (method="sweep", the default).
+
+    Each round evaluates Sigma_n lambda_n(T) for a whole geometric grid of
+    candidate deadlines in one pass (`kernels.ops.sp1_lambda_sum` for
+    LinearAccuracy, a vmapped lambda-bisection otherwise), narrows to the
+    sign-change bracket of Sigma lambda - w2 Rg, and finishes with a secant
+    step — replacing `_OUTER_ITERS` sequential outer bisections."""
+    from ..kernels import ops as kops
+    from ..kernels.sp1_sweep import N_CONSTS, lambda_of_T_linear
+
+    w = Weights(warr[0], warr[1], warr[2])
+    _, q = _coeffs(sys, w)
+    lam_hi, target, T_lo, T_hi = _sp1_bounds(sys, w, q, tt)
+    dtype = T_lo.dtype
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny, dtype)
+
+    linear = isinstance(acc, LinearAccuracy)
+    if linear:
+        k3 = 2.0 * w.w1 * sys.global_rounds * sys.kappa
+        consts = jnp.zeros((N_CONSTS,), dtype).at[:7].set(jnp.stack([
+            jnp.asarray(c, dtype) for c in
+            (k3, w.rho * acc.slope, sys.f_min, sys.f_max,
+             sys.s_lo, sys.s_hi, lam_hi)]))
+
+        def lam_sum(grid):
+            return kops.sp1_lambda_sum(grid, q, tt, consts).astype(dtype)
+
+        n_grid, rounds = _SWEEP_POINTS, _SWEEP_ROUNDS
+    else:
+        def lam_sum(grid):
+            return jax.vmap(lambda Tm: jnp.sum(
+                _lambda_of_T(sys, w, acc, Tm, tt, lam_hi)))(grid)
+
+        n_grid, rounds = _SWEEP_POINTS_GENERIC, _SWEEP_ROUNDS_GENERIC
+
+    lo, hi = T_lo, T_hi
+    S_lo = S_hi = None
+    for _ in range(rounds):
+        grid = jnp.geomspace(lo, hi, n_grid).astype(dtype)
+        S = lam_sum(grid)
+        # Sigma lambda(T) is nonincreasing in T; bracket its target crossing
+        under = S < target
+        idx = jnp.where(jnp.any(under), jnp.maximum(jnp.argmax(under), 1),
+                        n_grid - 1)
+        lo, hi = grid[idx - 1], grid[idx]
+        S_lo, S_hi = S[idx - 1], S[idx]
+    t = jnp.clip((S_lo - target) / jnp.maximum(S_lo - S_hi, tiny), 0.0, 1.0)
+    T = lo + t * (hi - lo)
+
+    if linear:
+        lam = lambda_of_T_linear(T, q, tt, k3, w.rho * acc.slope,
+                                 sys.f_min, sys.f_max, sys.s_lo, sys.s_hi,
+                                 lam_hi)
+    else:
+        lam = _lambda_of_T(sys, w, acc, T, tt, lam_hi)
+    return _finish_sp1(sys, w, acc, q, lam, tt, T)
+
+
+_SP1_IMPLS = {"sweep": _solve_sp1_sweep_impl, "bisect": _solve_sp1_impl}
 
 
 def solve_sp1(sys: SystemParams, w: Weights, acc: AccuracyModel,
-              bandwidth: Array, power: Array) -> Tuple[Array, Array, Array, Array]:
+              bandwidth: Array, power: Array, method: str = "sweep"
+              ) -> Tuple[Array, Array, Array, Array]:
     """Returns (f, s_discrete, s_hat, T).  T is the per-round makespan consistent
-    with the rounded resolution (used by SP2 for r_n^min)."""
+    with the rounded resolution (used by SP2 for r_n^min).
+
+    method: "sweep" (batched T-grid dual sweep, the default) or "bisect"
+    (the original nested bisection, kept as the parity oracle)."""
     from .energy import rate
 
+    if method not in _SP1_IMPLS:
+        raise ValueError(f"method must be sweep|bisect, got {method!r}")
     tt = sys.bits / jnp.maximum(rate(sys, bandwidth, power), 1e-12)
     warr = jnp.asarray([w.w1, max(w.w2, 1e-9), w.rho], tt.dtype)
-    return _solve_sp1_impl(sys, warr, acc, tt)
+    return _SP1_IMPLS[method](sys, warr, acc, tt)
 
 
 @partial(jax.jit, static_argnames=("acc",))
@@ -157,7 +273,7 @@ def _solve_sp1_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                           tt: Array, T_round: Array):
     w = Weights(warr[0], warr[1], warr[2])
     alpha, q = _coeffs(sys, w)
-    res = jnp.asarray(sys.resolutions)                      # (M,)
+    res = jnp.asarray(sys.resolutions, tt.dtype)            # (M,)
     budget = jnp.maximum(T_round - tt, 1e-9)[:, None]       # (N,1)
     f_req = q[:, None] * res[None, :] ** 2 / budget         # (N,M)
     feas = f_req <= sys.f_max * (1.0 + 1e-9)

@@ -66,18 +66,30 @@ def _clamp_rmin(sys: SystemParams, rmin: Array) -> Array:
     return jnp.minimum(rmin, 0.95 * asym)
 
 
-def _b_min(sys: SystemParams, rmin: Array, iters: int = 56) -> Array:
+def _search_iters(dtype, f32_iters: int = 34, f64_iters: int = 56) -> int:
+    """Iteration count for bracketing searches, matched to the compute dtype:
+    past ~34 golden / ~30 bisection steps an f32 bracket is already below one
+    ulp of its endpoints, so the f64 count just burns flops at fleet scale."""
+    return f32_iters if jnp.dtype(dtype).itemsize <= 4 else f64_iters
+
+
+def _b_min(sys: SystemParams, rmin: Array, iters: int | None = None) -> Array:
     """Smallest bandwidth at which G(pmax, B) >= rmin (G increasing in B)."""
     from jax import lax
+
+    if iters is None:
+        iters = _search_iters(rmin.dtype, f32_iters=30)
 
     def body(_, carry):
         lo, hi = carry
         mid = 0.5 * (lo + hi)
-        ok = G(sys, jnp.full_like(rmin, sys.p_max), mid) >= rmin
+        ok = G(sys, jnp.broadcast_to(jnp.asarray(sys.p_max, rmin.dtype),
+                                     rmin.shape), mid) >= rmin
         return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
 
     lo0 = jnp.full_like(rmin, 1e-3)
-    hi0 = jnp.full_like(rmin, float(sys.bandwidth_total))
+    hi0 = jnp.broadcast_to(jnp.asarray(sys.bandwidth_total, rmin.dtype),
+                           rmin.shape)
     _, hi = lax.fori_loop(0, iters, body, (lo0, hi0))
     return hi
 
@@ -98,17 +110,36 @@ def _h(sys: SystemParams, nu: Array, beta: Array, rmin: Array, B: Array) -> Arra
     return nu * (p * sys.bits - beta * G(sys, p, B))
 
 
-def _golden_argmin(fn, lo: Array, hi: Array, iters: int = 56) -> Array:
+def _golden_argmin(fn, lo: Array, hi: Array, iters: int | None = None) -> Array:
+    """Memoized golden-section: the surviving interior point is reused, so
+    each iteration evaluates `fn` exactly once (the textbook invariant; the
+    naive two-evals-per-step variant doubles the dominant SP2 cost at fleet
+    scale). Iteration count defaults to the dtype-matched `_search_iters`."""
     from jax import lax
 
-    def body(_, carry):
-        a, b = carry
-        c = b - _GOLD * (b - a)
-        d = a + _GOLD * (b - a)
-        left = fn(c) < fn(d)
-        return jnp.where(left, a, c), jnp.where(left, d, b)
+    if iters is None:
+        iters = _search_iters(jnp.asarray(lo).dtype)
 
-    a, b = lax.fori_loop(0, iters, body, (lo, hi))
+    c0 = hi - _GOLD * (hi - lo)
+    d0 = lo + _GOLD * (hi - lo)
+
+    def body(_, carry):
+        a, b, c, d, fc, fd = carry
+        left = fc < fd                      # keep [a, d] else [c, b]
+        a2 = jnp.where(left, a, c)
+        b2 = jnp.where(left, d, b)
+        # the surviving interior point becomes the far probe of the new
+        # bracket; only the near probe is fresh
+        c2 = jnp.where(left, b2 - _GOLD * (b2 - a2), d)
+        d2 = jnp.where(left, c, a2 + _GOLD * (b2 - a2))
+        x_new = jnp.where(left, c2, d2)
+        f_new = fn(x_new)
+        fc2 = jnp.where(left, f_new, fd)
+        fd2 = jnp.where(left, fc, f_new)
+        return a2, b2, c2, d2, fc2, fd2
+
+    a, b, _, _, _, _ = lax.fori_loop(0, iters, body,
+                                     (lo, hi, c0, d0, fn(c0), fn(d0)))
     return 0.5 * (a + b)
 
 
@@ -123,7 +154,9 @@ def _sp2_v2_impl(sys: SystemParams, nu: Array, beta: Array,
     # scale them to fit (best effort) so the dual search terminates.
     fit = jnp.minimum(1.0, 0.999 * sys.bandwidth_total / jnp.maximum(jnp.sum(b_lo), 1e-30))
     b_lo = b_lo * fit
-    b_hi = jnp.maximum(jnp.full_like(b_lo, float(sys.bandwidth_total)), b_lo)
+    b_hi = jnp.maximum(jnp.broadcast_to(jnp.asarray(sys.bandwidth_total,
+                                                    b_lo.dtype), b_lo.shape),
+                       b_lo)
 
     def B_of_mu(mu):
         return _golden_argmin(
@@ -141,7 +174,10 @@ def _sp2_v2_impl(sys: SystemParams, nu: Array, beta: Array,
         mu_hi, s, i = carry
         return (s >= sys.bandwidth_total) & (i < 200)
 
-    mu_hi0 = jnp.asarray(1e-12)
+    # mu literals pinned to the box dtype: a weak-f64 0.0 would promote the
+    # golden/bisection carries (and ultimately the BCD state) out of an f32
+    # system's dtype under x64
+    mu_hi0 = jnp.asarray(1e-12, b_lo.dtype)
     mu_hi, _, _ = lax.while_loop(expand_cond, expand,
                                  (mu_hi0, sum_B(mu_hi0), jnp.asarray(0)))
 
@@ -151,7 +187,8 @@ def _sp2_v2_impl(sys: SystemParams, nu: Array, beta: Array,
         over = sum_B(mid) > sys.bandwidth_total
         return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
 
-    mu_lo, mu_hi = lax.fori_loop(0, 56, bis, (jnp.asarray(0.0), mu_hi))
+    mu_lo, mu_hi = lax.fori_loop(0, _search_iters(b_lo.dtype, f32_iters=30),
+                                 bis, (jnp.asarray(0.0, b_lo.dtype), mu_hi))
     B_opt = B_of_mu(mu_hi)  # the feasible end of the bracket
 
     # exact budget: scale surplus above the rate floors
@@ -196,6 +233,36 @@ def _energy_of_B(sys: SystemParams, rmin: Array, B: Array) -> Array:
     return p * sys.bits / jnp.maximum(G(sys, p, B), 1e-12)
 
 
+def _denergy_dB(sys: SystemParams, rmin: Array, B: Array) -> Array:
+    """dE_n/dB for E_n(B) = p~(B) d / G(p~(B), B), p~ = clip(p_rate, pmin,
+    pmax) — the exact subdifferential selector for the waterfilling below.
+
+    Piecewise (the same regimes as `_energy_of_B`):
+      * rate branch (pmin <= p_rate <= pmax, G == rmin exactly):
+          E = (2^x - 1) N0 B d / (g rmin), x = rmin/B
+          dE/dB = (N0 d / (g rmin)) (2^x (1 - x ln2) - 1)        < 0
+      * clipped branch (p = pc in {pmin, pmax} constant):
+          dE/dB = -pc d G'(pc, B) / G(pc, B)^2,
+          G' = (ln(1+t) - t/(1+t)) / ln2, t = g pc / (N0 B)      < 0
+    """
+    N0, g, d = sys.noise_psd, sys.gain, sys.bits
+    ln2 = jnp.log(2.0)
+    Bs = jnp.maximum(B, 1e-12)
+    x = rmin / Bs
+    ex = jnp.exp2(x)
+    p_rate = (ex - 1.0) * N0 * Bs / g
+    dE_rate = (N0 * d / (g * jnp.maximum(rmin, 1e-30))) \
+        * (ex * (1.0 - x * ln2) - 1.0)
+    pc = jnp.where(p_rate < sys.p_min, sys.p_min, sys.p_max)
+    t = g * pc / (N0 * Bs)
+    L = jnp.log1p(t)
+    Gc = Bs * L / ln2
+    Gp = (L - t / (1.0 + t)) / ln2
+    dE_clip = -pc * d * Gp / jnp.maximum(Gc, 1e-12) ** 2
+    on_rate = (p_rate >= sys.p_min) & (p_rate <= sys.p_max)
+    return jnp.where(on_rate, dE_rate, dE_clip)
+
+
 @jax.jit
 def _sp2_direct_impl(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
     from jax import lax
@@ -204,19 +271,34 @@ def _sp2_direct_impl(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
     b_lo = _b_min(sys, rmin)
     fit = jnp.minimum(1.0, 0.999 * sys.bandwidth_total / jnp.maximum(jnp.sum(b_lo), 1e-30))
     b_lo = b_lo * fit          # infeasible deadline -> best-effort floors
-    b_hi = jnp.maximum(jnp.full_like(b_lo, float(sys.bandwidth_total)), b_lo)
+    b_hi = jnp.maximum(jnp.broadcast_to(jnp.asarray(sys.bandwidth_total,
+                                                    b_lo.dtype), b_lo.shape),
+                       b_lo)
+    inner = _search_iters(b_lo.dtype, f32_iters=24, f64_iters=48)
 
     def B_of_mu(mu):
-        return _golden_argmin(
-            lambda B: _energy_of_B(sys, rmin, B) + mu * B, b_lo, b_hi)
+        # argmin of the convex phi(B) = E(B) + mu B by sign-bisection on
+        # phi' (E convex => phi' nondecreasing; converges to the kink when
+        # the subdifferential straddles 0 there). One transcendental pair
+        # per step vs the former golden section's value evaluations, and a
+        # stationarity-exact answer at the same depth.
+        def body(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            pos = _denergy_dB(sys, rmin, mid) + mu >= 0.0
+            return jnp.where(pos, lo, mid), jnp.where(pos, mid, hi)
+
+        lo, hi = lax.fori_loop(0, inner, body, (b_lo, b_hi))
+        return 0.5 * (lo + hi)
 
     def sum_B(mu):
         return jnp.sum(B_of_mu(mu))
 
-    mu_hi0 = jnp.asarray(1e-18)
-    mu_hi, _, _ = lax.while_loop(lambda c: (c[1] >= sys.bandwidth_total) & (c[2] < 200),
-                                 lambda c: (c[0] * 8.0, sum_B(c[0] * 8.0), c[2] + 1),
-                                 (mu_hi0, sum_B(mu_hi0), jnp.asarray(0)))
+    # The budget multiplier needs no bracket expansion: at
+    # mu_hi = max_n -E_n'(b_lo) every device's phi' is nonnegative on the
+    # whole box, so B(mu_hi) == b_lo and sum b_lo <= 0.999 B (by `fit`).
+    mu_hi = jnp.maximum(jnp.max(-_denergy_dB(sys, rmin, b_lo)), 1e-30) \
+        * (1.0 + 1e-3)
 
     def bis(_, carry):
         lo, hi = carry
@@ -224,7 +306,8 @@ def _sp2_direct_impl(sys: SystemParams, rmin: Array) -> Tuple[Array, Array]:
         over = sum_B(mid) > sys.bandwidth_total
         return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
 
-    _, mu = lax.fori_loop(0, 56, bis, (jnp.asarray(0.0), mu_hi))
+    _, mu = lax.fori_loop(0, _search_iters(b_lo.dtype, f32_iters=36), bis,
+                          (jnp.asarray(0.0, b_lo.dtype), mu_hi))
     B_opt = B_of_mu(mu)
 
     total = jnp.sum(B_opt)
@@ -250,7 +333,7 @@ def _thm2_dual_mu(sys: SystemParams, j: Array, rmin: Array,
     bisections (hundreds of host syncs) with `1 + refine` batched sweeps."""
     from ..kernels import ops as kops
 
-    B_total = float(sys.bandwidth_total)
+    B_total = jnp.asarray(sys.bandwidth_total, j.dtype)   # traced per-cell leaf
     # g'(mu) is strictly decreasing; mu -> 0+ gives W -> -1 (g' -> +inf).
     # For mu >> j, W+1 ~ ln(mu/j), so the root satisfies
     #   ln(mu*/j) ~ sum(rmin) ln2 / B_total;
@@ -262,7 +345,7 @@ def _thm2_dual_mu(sys: SystemParams, j: Array, rmin: Array,
     cd = kops.waterfill_compute_dtype(j.dtype)
     lo = jnp.asarray(1e-30, j.dtype)
     base = 2.0 * jnp.max(j) + 1.0
-    nats = jnp.sum(rmin) * jnp.log(2.0) / max(B_total, 1e-30) + 10.0
+    nats = jnp.sum(rmin) * jnp.log(2.0) / jnp.maximum(B_total, 1e-30) + 10.0
     logmax = 0.9 * float(np.log(float(jnp.finfo(cd).max)))
     cap = logmax + jnp.minimum(jnp.log(jnp.min(j)), 0.0) - jnp.log(base)
     hi = base * jnp.exp(jnp.minimum(nats, cap))

@@ -44,13 +44,20 @@ DEFAULTS = dict(
 
 @dataclasses.dataclass(frozen=True)
 class SystemParams:
-    """Static description of one FL-MAR system instance (N devices)."""
+    """Static description of one FL-MAR system instance (N devices).
+
+    Per-cell scalars (bandwidth_total, p_max, ...) are pytree *leaves*, not
+    static aux data: `stack_systems`/`make_fleet` stack them into (C,) arrays
+    so cells with different bandwidth/power budgets batch through one vmap'd
+    solve (heterogeneous fleets). Only `resolutions` — which fixes array
+    shapes and the discrete s-menu — stays static. Solver code must therefore
+    treat these scalars as traced values (jnp ops, no float()/Python max)."""
     # per-device arrays, shape (N,)
     gain: Array          # E[G_n] expected channel gain (linear)
     cycles: Array        # c_n cycles per standard sample
     samples: Array       # D_n
     bits: Array          # d_n upload size in bits
-    # scalars
+    # per-cell scalars (traced leaves; float or 0-d array per cell)
     bandwidth_total: float
     noise_psd: float
     p_min: float
@@ -60,7 +67,7 @@ class SystemParams:
     kappa: float
     local_iters: float   # R_l
     global_rounds: float # R_g
-    resolutions: tuple   # (s_bar_1..s_bar_M), ascending
+    resolutions: tuple   # (s_bar_1..s_bar_M), ascending — static aux
     s_standard: float
 
     @property
@@ -121,15 +128,18 @@ jax.tree_util.register_pytree_node(
     lambda _, c: Allocation(*c),
 )
 
+# Numeric per-cell scalars: pytree LEAVES (traced; may differ per cell in a
+# stacked fleet). `resolutions` is the only static aux datum.
 _SYS_SCALARS = ("bandwidth_total", "noise_psd", "p_min", "p_max", "f_min",
-                "f_max", "kappa", "local_iters", "global_rounds",
-                "resolutions", "s_standard")
+                "f_max", "kappa", "local_iters", "global_rounds", "s_standard")
 _SYS_ARRAYS = ("gain", "cycles", "samples", "bits")
+_SYS_STATIC = ("resolutions",)
+_SYS_LEAVES = _SYS_ARRAYS + _SYS_SCALARS
 
 jax.tree_util.register_pytree_node(
     SystemParams,
-    lambda s: (tuple(getattr(s, k) for k in _SYS_ARRAYS),
-               tuple(getattr(s, k) for k in _SYS_SCALARS)),
-    lambda aux, leaves: SystemParams(**dict(zip(_SYS_ARRAYS, leaves)),
-                                     **dict(zip(_SYS_SCALARS, aux))),
+    lambda s: (tuple(getattr(s, k) for k in _SYS_LEAVES),
+               tuple(getattr(s, k) for k in _SYS_STATIC)),
+    lambda aux, leaves: SystemParams(**dict(zip(_SYS_LEAVES, leaves)),
+                                     **dict(zip(_SYS_STATIC, aux))),
 )

@@ -16,8 +16,10 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.ref import sp1_lambda_sum_ref as _sp1_sweep_ref
 from repro.kernels.ref import waterfill_gprime_ref as _waterfill_ref
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
+from repro.kernels.sp1_sweep import sp1_lambda_sum as _sp1_sweep
 from repro.kernels.waterfill import waterfill_gprime as _waterfill
 
 
@@ -58,18 +60,30 @@ def waterfill_compute_dtype(input_dtype):
     return jnp.dtype(input_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("B_total", "block_n", "impl",
-                                             "dtype"))
-def _waterfill_dispatch(mu, j, rmin, B_total: float, *, block_n: int,
+def _resolve_impl(impl: str) -> str:
+    """Shared "auto" resolution for the dual-sweep ops: native Pallas on TPU,
+    the pure-jnp ref oracle on CPU, interpret-mode kernel bodies under
+    REPRO_FORCE_INTERPRET=1. Resolved OUTSIDE the jit cache so flipping the
+    env var between calls takes effect (impl is the static cache key)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if (jax.default_backend() == "tpu"
+                            or os.environ.get("REPRO_FORCE_INTERPRET")) else "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "impl", "dtype"))
+def _waterfill_dispatch(mu, j, rmin, B_total, *, block_n: int,
                         impl: str, dtype):
     if impl == "ref":
         return _waterfill_ref(mu.astype(dtype), j.astype(dtype),
-                              rmin.astype(dtype), B_total)
-    return _waterfill(mu, j, rmin, B_total, block_n=block_n,
-                      interpret=_interpret(), dtype=dtype)
+                              rmin.astype(dtype), jnp.asarray(B_total, dtype))
+    return _waterfill(mu, j, rmin, jnp.asarray(B_total, dtype),
+                      block_n=block_n, interpret=_interpret(), dtype=dtype)
 
 
-def waterfill_gprime(mu, j, rmin, B_total: float, *, block_n: int = 1024,
+def waterfill_gprime(mu, j, rmin, B_total, *, block_n: int = 1024,
                      impl: str = "auto"):
     """Production entry for the SP2 dual sweep (used by `core.sp2`).
 
@@ -77,15 +91,35 @@ def waterfill_gprime(mu, j, rmin, B_total: float, *, block_n: int = 1024,
           (full input precision, no interpret-mode overhead); setting
           REPRO_FORCE_INTERPRET=1 routes "auto" through the interpret-mode
           kernel body instead.  "pallas" / "ref" force a path explicitly.
-    "auto" is resolved here, outside the jit cache, so flipping the env var
-    between calls takes effect (it becomes the static `impl` cache key).
+    B_total may be a traced scalar (a per-cell leaf in heterogeneous fleets).
     Computes in `waterfill_compute_dtype(mu.dtype)`.
     """
-    if impl not in ("auto", "pallas", "ref"):
-        raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
-    if impl == "auto":
-        impl = "pallas" if (jax.default_backend() == "tpu"
-                            or os.environ.get("REPRO_FORCE_INTERPRET")) else "ref"
     return _waterfill_dispatch(mu, j, rmin, B_total, block_n=block_n,
-                               impl=impl,
+                               impl=_resolve_impl(impl),
                                dtype=waterfill_compute_dtype(mu.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "impl", "dtype"))
+def _sp1_sweep_dispatch(T_grid, q, tt, consts, *, block_n: int,
+                        impl: str, dtype):
+    if impl == "ref":
+        return _sp1_sweep_ref(T_grid.astype(dtype), q.astype(dtype),
+                              tt.astype(dtype), consts.astype(dtype))
+    return _sp1_sweep(T_grid, q, tt, consts, block_n=block_n,
+                      interpret=_interpret(), dtype=dtype)
+
+
+def sp1_lambda_sum(T_grid, q, tt, consts, *, block_n: int = 1024,
+                   impl: str = "auto"):
+    """Production entry for the batched SP1 dual sweep (used by `core.sp1`):
+    Sigma_n lambda_n(T) for M candidate deadlines in one device pass.
+
+    T_grid: (M,) candidate round deadlines; q/tt: (N,) per-device cycle and
+    transmission-time coefficients; consts: (sp1_sweep.N_CONSTS,) scalar
+    coefficient vector (may be traced — per-cell leaves vary across a
+    heterogeneous fleet). impl semantics match `waterfill_gprime`; computes
+    in `waterfill_compute_dtype(T_grid.dtype)`.
+    """
+    return _sp1_sweep_dispatch(T_grid, q, tt, consts, block_n=block_n,
+                               impl=_resolve_impl(impl),
+                               dtype=waterfill_compute_dtype(T_grid.dtype))

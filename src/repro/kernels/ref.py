@@ -83,8 +83,22 @@ def mamba_scan_ref(dt: jax.Array, A: jax.Array, Bt: jax.Array, Ct: jax.Array,
     return ys.transpose(1, 0, 2), h_end
 
 
+def sp1_lambda_sum_ref(T_grid: jax.Array, q: jax.Array, tt: jax.Array,
+                       consts: jax.Array) -> jax.Array:
+    """Sigma_n lambda_n(T) for each candidate deadline (the SP1 dual sweep):
+    T_grid: (M,); q, tt: (N,); consts: (N_CONSTS,) as laid out in
+    `sp1_sweep`. Returns (M,). Full input precision, no kernel padding."""
+    from repro.kernels.sp1_sweep import lambda_of_T_linear
+
+    lam = lambda_of_T_linear(
+        T_grid[:, None], q[None, :], tt[None, :],
+        consts[0], consts[1], consts[2], consts[3], consts[4], consts[5],
+        consts[6])
+    return jnp.sum(lam, axis=1)
+
+
 def waterfill_gprime_ref(mu: jax.Array, j: jax.Array, rmin: jax.Array,
-                         B_total: float) -> jax.Array:
+                         B_total) -> jax.Array:
     """g'(mu) for each candidate mu (the SP2 dual derivative, eq. A.23):
     mu: (M,); j, rmin: (N,). Returns (M,)."""
     from repro.core.lambertw import lambertw0

@@ -75,7 +75,7 @@ def _waterfill_kernel(mu_ref, j_ref, rmin_ref, out_ref, *, dtype):
 
 
 def waterfill_gprime(mu: jax.Array, j: jax.Array, rmin: jax.Array,
-                     B_total: float, *, block_n: int = 1024,
+                     B_total, *, block_n: int = 1024,
                      interpret: bool = False,
                      dtype=jnp.float32) -> jax.Array:
     """g'(mu) per candidate: mu (M,), j/rmin (N,) -> (M,). Any N: the tail
