@@ -1,0 +1,81 @@
+"""Diff a fresh benchmark --json artifact against a committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare FRESH.json BASELINE.json \
+        [--factor 2.0]
+
+Rows are matched by name; a fresh row slower than `factor` x the baseline
+`us_per_call` emits a GitHub-Actions `::warning::` annotation (plain text on
+a terminal). Non-blocking by design: the exit code is always 0 — this is a
+perf-trajectory tripwire, not a gate (CI hosts differ from the recording
+host, so absolute walls drift; >2x on the same row is worth a look).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def compare(fresh_path: str, base_path: str, factor: float = 2.0) -> int:
+    try:
+        fresh, base = load_rows(fresh_path), load_rows(base_path)
+    except (OSError, ValueError, KeyError) as e:
+        # stay non-blocking even when an artifact is missing or malformed
+        # (e.g. the fresh bench step itself failed under continue-on-error)
+        print(f"::warning::benchmarks.compare: cannot read artifacts: {e}")
+        return 0
+    common = sorted(set(fresh) & set(base))
+    if not common:
+        print(f"::warning::benchmarks.compare: no common rows between "
+              f"{fresh_path} and {base_path}")
+        return 0
+    n_slow = 0
+    for name in common:
+        try:
+            f_us = max(float(fresh[name]["us_per_call"]), 1.0)
+            b_us = max(float(base[name]["us_per_call"]), 1.0)
+        except (KeyError, TypeError, ValueError) as e:
+            print(f"::warning::bench row {name}: malformed ({e})")
+            continue
+        ratio = f_us / b_us
+        status = "ok"
+        if ratio > factor:
+            n_slow += 1
+            status = "SLOW"
+            print(f"::warning::bench row {name} regressed {ratio:.2f}x "
+                  f"({b_us / 1e6:.2f}s -> {f_us / 1e6:.2f}s)")
+        print(f"{name}: {ratio:.2f}x vs baseline [{status}]")
+    only_base = sorted(set(base) - set(fresh))
+    if only_base:
+        print(f"baseline-only rows (not re-run): {', '.join(only_base)}")
+    print(f"# compared {len(common)} rows, {n_slow} regressed "
+          f"beyond {factor:.1f}x")
+    return 0
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    factor = 2.0
+    if "--factor" in args:
+        i = args.index("--factor")
+        try:
+            factor = float(args[i + 1])
+        except (IndexError, ValueError):
+            print("::warning::benchmarks.compare: bad --factor value, "
+                  "using 2.0")
+        args = args[:i] + args[i + 2:]
+    if len(args) != 2:
+        # still exit 0: this tool must never break a CI pipeline
+        print("::warning::usage: python -m benchmarks.compare FRESH.json "
+              "BASELINE.json [--factor F]")
+        sys.exit(0)
+    sys.exit(compare(args[0], args[1], factor))
+
+
+if __name__ == "__main__":
+    main()

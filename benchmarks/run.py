@@ -228,6 +228,67 @@ def fleet_scale():
          f"wall_s={t1 - t0:.1f}")
 
 
+def rounds_dynamics():
+    """Round-dynamics engine acceptance row: R=32 rounds x C=64 cells x
+    N=2048 devices as ONE jitted scan (vmap'd over cells, no per-round host
+    sync), Gauss-Markov fading + stragglers/staleness + dropouts.
+
+    Warm-vs-cold: the warm engine re-allocates each round from the previous
+    round's allocation (bcd_iters=3, tol=1e-3 — the per-round solve residual
+    only needs to sit well below the percent-scale channel drift); the cold
+    reference is the SAME engine with warm_start=False, i.e. a cold
+    `allocate_fleet` (paper init, fleet-row max_iters=8 calibration) every
+    round. Both walls include one compile amortized over the 32 rounds."""
+    from repro.dynamics import RoundsConfig, run_rounds_fleet
+
+    R, C, N = 32, 64, 2048
+    key = jax.random.PRNGKey(51)
+    fleet = make_fleet(key, n_cells=C, n_devices=N,
+                       bandwidth_total=20e6 * N / 50)
+    w = Weights(0.5, 0.5, 1.0)
+
+    # round-0 allocation the warm engine starts from (one cold fleet solve)
+    t0 = time.time()
+    base = allocate_fleet(fleet, w, max_iters=8)
+    jax.block_until_ready(base.allocation.bandwidth)
+    t_base = time.time() - t0
+
+    kw = dict(rounds=R, channel_mode="markov", drift_rho=0.95,
+              participation="stale", dropout_prob=0.02, bcd_tol=1e-3)
+    walls, conv_min, iters_mean, rr_warm = {}, {}, {}, None
+    for tag, cfg in [
+        ("warm", RoundsConfig(bcd_iters=3, **kw)),
+        ("cold", RoundsConfig(bcd_iters=8, warm_start=False, **kw)),
+    ]:
+        t0 = time.time()
+        rr = run_rounds_fleet(jax.random.PRNGKey(52), fleet, w, cfg,
+                              init=base.allocation)
+        jax.block_until_ready(rr.ledger)
+        walls[tag] = time.time() - t0
+        per_round_cells = jnp.mean(rr.col("bcd_converged"), axis=0)
+        conv_min[tag] = float(jnp.min(per_round_cells))
+        iters_mean[tag] = float(jnp.mean(rr.col("bcd_iters")))
+        if tag == "warm":
+            rr_warm = rr
+        del rr   # don't retain the cold run's (C, R, N) arrays
+
+    rr = rr_warm
+    t0 = time.time()
+    _row(f"rounds.R{R}.C{C}.N{N}", t0, t0 + walls["warm"],
+         f"devices={C * N};s_per_round={walls['warm'] / R:.2f};"
+         f"warm_vs_cold={walls['cold'] / walls['warm']:.1f}x;"
+         f"conv_min={conv_min['warm']:.3f};"
+         f"mean_bcd_iters={iters_mean['warm']:.2f};"
+         f"arrived_frac={float(jnp.mean(rr.col('arrived_frac'))):.3f};"
+         f"mean_obj={float(jnp.mean(rr.col('objective'))):.4g};"
+         f"fleet_solve_s={t_base:.1f}")
+    t0 = time.time()
+    _row(f"rounds.cold_restart.R{R}.C{C}.N{N}", t0, t0 + walls["cold"],
+         f"s_per_round={walls['cold'] / R:.2f};"
+         f"conv_min={conv_min['cold']:.3f};"
+         f"mean_bcd_iters={iters_mean['cold']:.2f}")
+
+
 def sp1_sweep_scale():
     """SP1 engines head-to-head: the batched T-grid dual sweep vs the nested
     56x56 bisection oracle, one solve at region scale (per-iteration SP1 cost
@@ -321,6 +382,7 @@ BENCHES = {
     "fig9": fig9_vs_scheme1,
     "scaling": table_allocator_scaling,
     "fleet": fleet_scale,
+    "rounds": rounds_dynamics,
     "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,
     "roofline": roofline_table,

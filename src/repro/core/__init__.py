@@ -11,7 +11,8 @@ from .accuracy import (AccuracyModel, LinearAccuracy, LogAccuracy,
                        default_accuracy, linear_from_endpoints, log_fit)
 from .bcd import (BCDResult, FleetResult, allocate, allocate_fixed_deadline,
                   allocate_fleet, initial_allocation, stack_systems)
-from .channel import expected_gain, make_fleet, make_system, sample_gain
+from .channel import (drift_shadowing, expected_gain, make_fleet, make_system,
+                      sample_gain, shadowing_to_gain)
 from .energy import (feasible, objective, round_time, summarize,
                      total_accuracy, total_energy, total_time)
 from .types import Allocation, SystemParams, Weights, dbm_to_watt
@@ -20,8 +21,9 @@ __all__ = [
     "AccuracyModel", "LinearAccuracy", "LogAccuracy", "default_accuracy",
     "linear_from_endpoints", "log_fit", "BCDResult", "FleetResult",
     "allocate", "allocate_fixed_deadline", "allocate_fleet",
-    "initial_allocation", "stack_systems", "expected_gain", "make_fleet",
-    "make_system", "sample_gain", "feasible", "objective", "round_time",
+    "initial_allocation", "stack_systems", "drift_shadowing", "expected_gain",
+    "make_fleet", "make_system", "sample_gain", "shadowing_to_gain",
+    "feasible", "objective", "round_time",
     "summarize", "total_accuracy", "total_energy", "total_time",
     "Allocation", "SystemParams", "Weights", "dbm_to_watt",
 ]

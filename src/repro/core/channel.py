@@ -43,13 +43,44 @@ def expected_gain(key: jax.Array, n: int, area_m: float,
     return 10.0 ** (-pl_db / 10.0) * shadow_mean
 
 
-def sample_gain(key: jax.Array, expected: jax.Array, shadowing_db: float) -> jax.Array:
-    """Draw one realization g_{n,r} of the channel for a global round."""
-    sigma = shadowing_db * jnp.log(10.0) / 10.0
-    # divide out the folded-in mean so that E[sample] == expected
+def shadowing_sigma(shadowing_db: float) -> float:
+    """Natural-log sigma of the lognormal shadow fading (sigma_dB -> ln)."""
+    return shadowing_db * float(np.log(10.0)) / 10.0
+
+
+def shadowing_to_gain(expected: jax.Array, x: jax.Array,
+                      shadowing_db: float) -> jax.Array:
+    """Map a standard-normal shadowing state x to a gain realization.
+
+    `expected` already folds in the lognormal mean E[10^(X/10)]
+    (see `expected_gain`), so we divide it back out before applying the
+    realization: E_x[shadowing_to_gain(expected, x, db)] == expected.
+    """
+    x = jnp.asarray(x)
+    sigma = jnp.asarray(shadowing_sigma(shadowing_db), x.dtype)
     shadow_mean = jnp.exp(sigma ** 2 / 2.0)
-    z = jax.random.normal(key, expected.shape)
-    return expected / shadow_mean * jnp.exp(sigma * z)
+    return expected / shadow_mean * jnp.exp(sigma * x)
+
+
+def sample_gain(key: jax.Array, expected: jax.Array, shadowing_db: float) -> jax.Array:
+    """Draw one iid realization g_{n,r} of the channel for a global round.
+
+    Dtype follows `expected` (the fleet may run f32 under x64)."""
+    expected = jnp.asarray(expected)
+    z = jax.random.normal(key, expected.shape, expected.dtype)
+    return shadowing_to_gain(expected, z, shadowing_db)
+
+
+def drift_shadowing(key: jax.Array, x: jax.Array, rho: float) -> jax.Array:
+    """One AR(1) Gauss-Markov step of the standard-normal shadowing state:
+    x' = rho x + sqrt(1 - rho^2) z, z ~ N(0, 1) — the Gudmundson-style
+    mobility/pathloss drift model (round-to-round correlated fading). The
+    stationary law stays N(0, 1), so `shadowing_to_gain` keeps
+    E[gain] == expected at every round."""
+    x = jnp.asarray(x)
+    rho = jnp.asarray(rho, x.dtype)
+    z = jax.random.normal(key, x.shape, x.dtype)
+    return rho * x + jnp.sqrt(jnp.maximum(1.0 - rho ** 2, 0.0)) * z
 
 
 def make_system(key: jax.Array, n_devices: int | None = None, **overrides) -> SystemParams:

@@ -1,0 +1,20 @@
+"""repro.dynamics — jit-resident FL round-dynamics engine.
+
+Runs R global rounds as one `lax.scan`: per-round sampled channel gains
+(iid or AR(1) Gauss-Markov drift), warm-started BCD re-allocation, and a
+straggler/dropout/async-staleness participation model, with the realized
+energy/time/accuracy ledger accumulated on device. See `dynamics.engine`
+for the system picture and ROADMAP ("Channel dynamics", "Async FL rounds").
+
+Public API:
+    RoundsConfig, RoundsResult, ROUND_COLS   configuration / result types
+    run_rounds                               one cell, R rounds, one scan
+    run_rounds_fleet                         vmapped across stacked cells
+    staleness_of, queue_step                 participation-model primitives
+"""
+from .config import ROUND_COLS, RoundsConfig, RoundsResult
+from .engine import run_rounds, run_rounds_fleet
+from .participation import queue_step, staleness_of
+
+__all__ = ["ROUND_COLS", "RoundsConfig", "RoundsResult", "run_rounds",
+           "run_rounds_fleet", "queue_step", "staleness_of"]

@@ -1,0 +1,46 @@
+"""Participation models: stragglers, dropouts, and the async staleness queue.
+
+All functions are pure jnp on fixed shapes so they live inside the round
+engine's `lax.scan` without host syncs. The staleness queue is a fixed-size
+(K,) ring: slot j holds the aggregate mass arriving j+1 rounds from now.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def staleness_of(t_dev: Array, deadline: Array, max_staleness: int) -> Array:
+    """Rounds of lateness per device: an update whose realized round time
+    t_n lands in (k * deadline, (k+1) * deadline] arrives k rounds late.
+    On-time devices (t_n <= deadline) get 0; lateness clips to
+    `max_staleness` (updates later than that are dropped by the caller or
+    arrive at the clip)."""
+    t = jnp.asarray(t_dev)
+    d = jnp.maximum(jnp.asarray(deadline, t.dtype), jnp.finfo(t.dtype).tiny)
+    k = jnp.ceil(t / d) - 1.0
+    return jnp.clip(k, 0, max_staleness).astype(jnp.int32)
+
+
+def queue_step(queue_w: Array, queue_u: Array, push_idx: Array,
+               push_w: Array, push_u: Array
+               ) -> Tuple[Array, Array, Array, Array]:
+    """One round of the staleness queue.
+
+    Pops slot 0 (mass arriving this round), shifts the ring left, and
+    scatter-adds the newly late mass: a device k rounds late this round is
+    pushed at index k-1 of the shifted queue (it arrives at round r+k, which
+    is k-1 rounds after round r+1).
+
+    queue_w / queue_u: (K,) aggregate FedAvg weight / utility mass.
+    push_idx: (N,) int32 in [0, K); push_w / push_u: (N,) masses (0 where a
+    device is not late). Returns (queue_w', queue_u', popped_w, popped_u).
+    """
+    pop_w, pop_u = queue_w[0], queue_u[0]
+    zero = jnp.zeros((1,), queue_w.dtype)
+    qw = jnp.concatenate([queue_w[1:], zero]).at[push_idx].add(push_w)
+    qu = jnp.concatenate([queue_u[1:], zero]).at[push_idx].add(push_u)
+    return qw, qu, pop_w, pop_u

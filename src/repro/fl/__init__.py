@@ -1,9 +1,12 @@
 """repro.fl — federated-learning substrate (FedAvg, data, system simulator)."""
 from .client import client_delta, local_train
 from .data import FLDataset, make_eval_set, make_federated_dataset, render
-from .server import FLRunResult, fedavg, run_federated
+from .server import (FLRunResult, fedavg, fedavg_stale, resolve_eval_resolution,
+                     run_federated, stale_weights)
 from .simulator import SimResult, map_resolution_to_dataset, simulate
 
 __all__ = ["client_delta", "local_train", "FLDataset", "make_eval_set",
            "make_federated_dataset", "render", "FLRunResult", "fedavg",
-           "run_federated", "SimResult", "map_resolution_to_dataset", "simulate"]
+           "fedavg_stale", "resolve_eval_resolution", "run_federated",
+           "stale_weights", "SimResult", "map_resolution_to_dataset",
+           "simulate"]

@@ -12,6 +12,7 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fl.client import local_train
 from repro.fl.data import FLDataset, make_eval_set, render
@@ -31,6 +32,46 @@ def fedavg(params_list: Sequence[Params], weights: jax.Array) -> Params:
     return jax.tree_util.tree_map(avg, *params_list)
 
 
+def stale_weights(sizes: jax.Array, staleness: jax.Array,
+                  decay: float) -> jax.Array:
+    """Staleness-discounted FedAvg mass: D_n * decay^k for an update that
+    arrives k rounds late (k = 0 is on time)."""
+    return jnp.asarray(sizes) * jnp.asarray(decay) ** jnp.asarray(staleness)
+
+
+def fedavg_stale(global_params: Params, updates: Sequence[Params],
+                 eff_weights: Sequence[float],
+                 total_weight: float) -> Params:
+    """Staleness-aware aggregation hook for the round-dynamics engine.
+
+    Updates arriving this round aggregate with their (already discounted)
+    effective mass; the mass that did not arrive — dropped devices plus the
+    discount lost to staleness — anchors to the current global model, so
+    full on-time participation reduces exactly to plain `fedavg` and an
+    empty arrival set leaves the model unchanged.
+    """
+    if not updates:
+        return global_params
+    anchor = max(float(total_weight) - float(sum(eff_weights)), 0.0)
+    return fedavg(list(updates) + [global_params],
+                  jnp.asarray(list(eff_weights) + [anchor]))
+
+
+def resolve_eval_resolution(eval_resolution: Optional[int],
+                            resolutions: Sequence[int]) -> int:
+    """Explicit `is None` check: `eval_resolution or median` silently
+    swallowed a falsy-zero override into the median fallback. An explicit
+    invalid resolution (< 1 pixel would ZeroDivisionError inside `render`)
+    now fails loudly instead."""
+    if eval_resolution is not None:
+        if int(eval_resolution) < 1:
+            raise ValueError(
+                f"eval_resolution must be >= 1 pixel, got {eval_resolution}")
+        return int(eval_resolution)
+    rs = sorted(int(r) for r in resolutions)
+    return rs[len(rs) // 2]
+
+
 @dataclasses.dataclass
 class FLRunResult:
     params: Params
@@ -43,18 +84,25 @@ def run_federated(key: jax.Array, ds: FLDataset,
                   global_rounds: int = 20, local_iters: int = 10,
                   lr: float = 0.05,
                   eval_every: int = 1, eval_n: int = 512,
-                  eval_resolution: Optional[int] = None) -> FLRunResult:
+                  eval_resolution: Optional[int] = None,
+                  staleness=None, staleness_decay: float = 0.5) -> FLRunResult:
     """FedAvg over `ds` with per-client frame resolutions from the allocator.
 
     resolutions: one rendering resolution per client (the allocator's s_n,
     mapped onto the dataset's resolution grid by the simulator).
+    staleness: optional (global_rounds, n_clients) int array from the
+    round-dynamics engine (`RoundsResult.staleness`): -1 = the client's
+    update is lost this round (dropout / dropped straggler), 0 = arrives on
+    time, k > 0 = arrives k rounds late with its FedAvg mass discounted by
+    staleness_decay**k (late clients still train, from the global model of
+    the round they started).
     """
     k_init, k_eval = jax.random.split(key)
     params = init_cnn(k_init, num_classes=ds.num_classes)
     ev_imgs, ev_labels = make_eval_set(k_eval, ds, n=eval_n)
     # MAR deployment serves at the frame resolution the fleet runs at: eval at
     # the median allocated resolution unless overridden.
-    ev_res = eval_resolution or int(sorted(resolutions)[len(resolutions) // 2])
+    ev_res = resolve_eval_resolution(eval_resolution, resolutions)
     ev_imgs = render(ev_imgs, ev_res)
 
     # pre-render each client's shard at its allocated resolution
@@ -66,14 +114,36 @@ def run_federated(key: jax.Array, ds: FLDataset,
 
     accs: List[float] = []
     losses: List[float] = []
+    if staleness is not None:
+        staleness = np.asarray(staleness)
+    total_w = float(jnp.sum(sizes))
+    pending: dict = {}   # arrival round -> [(params, discounted weight)]
     for r in range(global_rounds):
-        updated, round_losses = [], []
+        updated, weights, round_losses = [], [], []
         for i, (imgs, labels) in enumerate(client_data):
+            code = 0 if staleness is None else int(staleness[r][i])
+            if code < 0:   # update lost this round: client doesn't contribute
+                continue
+            if code > 0 and r + code >= global_rounds:
+                continue   # would arrive after the run ends: skip the train
             p_i, loss_i = local_train(params, imgs, labels, lr, local_iters)
-            updated.append(p_i)
             round_losses.append(float(loss_i))
-        params = fedavg(updated, sizes)
-        losses.append(sum(round_losses) / len(round_losses))
+            if code == 0:
+                updated.append(p_i)
+                if staleness is not None:   # plain path aggregates by sizes
+                    weights.append(float(sizes[i]))
+            else:          # stale: arrives `code` rounds later, discounted
+                w_eff = float(stale_weights(sizes[i], code, staleness_decay))
+                pending.setdefault(r + code, []).append((p_i, w_eff))
+        if staleness is None:
+            params = fedavg(updated, sizes)
+        else:
+            arrivals = pending.pop(r, [])
+            updated += [p for p, _ in arrivals]
+            weights += [w for _, w in arrivals]
+            params = fedavg_stale(params, updated, weights, total_w)
+        losses.append(sum(round_losses) / len(round_losses)
+                      if round_losses else float("nan"))
         if (r + 1) % eval_every == 0:
             accs.append(float(eval_accuracy(params, ev_imgs, ev_labels)))
     return FLRunResult(params=params, round_accuracy=accs, round_loss=losses)

@@ -5,33 +5,42 @@ This is the end-to-end loop of the paper's Fig. 1:
     allocate -> each device trains locally at its allocated resolution /
     CPU frequency -> uploads over its allocated (p_n, B_n) channel ->
     FedAvg -> repeat; the ledger accumulates eqs. (2), (3), (8), (10).
+
+The per-round physics runs through the jit-resident round-dynamics engine
+(`repro.dynamics.run_rounds`): one `lax.scan` over the R global rounds with
+optional sampled channel gains, warm-started re-allocation, and a
+straggler/dropout/staleness participation model whose realized per-device
+codes feed the staleness-weighted FedAvg in `repro.fl.server`. The default
+(static channels, full participation) reproduces the historical
+allocate-once ledger.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import Allocation, SystemParams, Weights, allocate
 from repro.core.accuracy import AccuracyModel, default_accuracy
-from repro.core.energy import e_cmp, e_trans, t_cmp, t_trans
+from repro.dynamics import RoundsConfig, RoundsResult, run_rounds
 from repro.fl.data import FLDataset, make_federated_dataset
 from repro.fl.server import FLRunResult, run_federated
 
 
 def map_resolution_to_dataset(sys: SystemParams, resolution: jax.Array,
-                              dataset_resolutions: Sequence[int]) -> List[int]:
+                              dataset_resolutions: Sequence[int]) -> jax.Array:
     """Map the allocator's s_n (pixels on the paper's 160..640 grid) onto the
-    dataset's rendering grid by index (s_bar_m <-> dataset_res_m)."""
-    res = list(sys.resolutions)
-    out = []
-    for s in resolution.tolist():
-        idx = min(range(len(res)), key=lambda m: abs(res[m] - s))
-        idx = min(idx, len(dataset_resolutions) - 1)
-        out.append(int(dataset_resolutions[idx]))
-    return out
+    dataset's rendering grid by index (s_bar_m <-> dataset_res_m).
+
+    Pure jnp (argmin snap onto the resolution menu), so it is jit-safe and
+    usable inside a scan; returns an int32 array of dataset resolutions."""
+    resolution = jnp.asarray(resolution)
+    menu = jnp.asarray(sys.resolutions, resolution.dtype)
+    idx = jnp.argmin(jnp.abs(resolution[..., None] - menu), axis=-1)
+    idx = jnp.minimum(idx, len(dataset_resolutions) - 1)
+    return jnp.take(jnp.asarray(dataset_resolutions, jnp.int32), idx)
 
 
 @dataclasses.dataclass
@@ -39,6 +48,7 @@ class SimResult:
     allocation: Allocation
     fl: FLRunResult
     ledger: Dict[str, float]
+    rounds: Optional[RoundsResult] = None
 
 
 def simulate(key: jax.Array, sys: SystemParams, w: Weights,
@@ -47,33 +57,55 @@ def simulate(key: jax.Array, sys: SystemParams, w: Weights,
              dataset_resolutions: Sequence[int] = (8, 16, 24, 32),
              global_rounds: int = 10, local_iters: int = 5,
              lr: float = 0.05, split: str = "iid",
-             unbalanced: bool = False) -> SimResult:
+             unbalanced: bool = False,
+             dynamics: Optional[RoundsConfig] = None) -> SimResult:
     """Allocate resources, run FedAvg at the allocated resolutions, and return
-    the energy/time ledger implied by the allocation (paper eqs. 9 & 11)."""
+    the realized energy/time ledger (paper eqs. 9 & 11).
+
+    dynamics: optional RoundsConfig for the round engine (channel fading,
+    stragglers, staleness); `rounds` is forced to `global_rounds` so the
+    physics and the FL training see the same number of rounds. The default
+    is the static/full-participation config, which reproduces the historical
+    allocate-once ledger.
+    """
+    # keep the historical 2-way split so same-seed dataset/FL streams still
+    # reproduce pre-engine runs; the dynamics stream is a fresh fold
     k_ds, k_fl = jax.random.split(key)
+    k_dyn = jax.random.fold_in(key, 2)
     if dataset is None:
         dataset = make_federated_dataset(
             k_ds, n_clients=sys.n, split=split, unbalanced=unbalanced)
     assert dataset.n_clients == sys.n, "one device per FL client"
 
-    result = allocate(sys, w, acc=acc_model or default_accuracy(), max_iters=8)
-    alloc = result.allocation
-    ds_res = map_resolution_to_dataset(sys, alloc.resolution, dataset_resolutions)
+    acc = acc_model if acc_model is not None else default_accuracy()
+    # one full cold solve seeds the engine either way: the static path holds
+    # it fixed (bcd_iters=0 — the historical allocate-once ledger, no
+    # per-round re-solve), the dynamics path warm-starts round 1 from it so
+    # no round ever trains on an unconverged cold-capped allocation
+    init = allocate(sys, w, acc=acc, max_iters=8).allocation
+    if dynamics is None:
+        cfg = RoundsConfig(rounds=global_rounds, bcd_iters=0)
+    else:
+        cfg = dynamics
+        if cfg.rounds != global_rounds:
+            cfg = dataclasses.replace(cfg, rounds=global_rounds)
+    rr = run_rounds(k_dyn, sys, w, cfg, acc=acc, init=init)
+    alloc = rr.allocation
+    # clients pre-render at the ROUND-0 resolutions: round 0's training can't
+    # see the final round's channel state (under the static default all
+    # rounds allocate identically, so this is the historical behavior)
+    ds_res = map_resolution_to_dataset(sys, rr.resolutions[0],
+                                       dataset_resolutions)
 
+    staleness = None if dynamics is None else rr.staleness
     fl = run_federated(k_fl, dataset, ds_res,
                        global_rounds=global_rounds, local_iters=local_iters,
-                       lr=lr)
+                       lr=lr, staleness=staleness,
+                       staleness_decay=cfg.staleness_decay)
 
-    per_round_e = (e_trans(sys, alloc.bandwidth, alloc.power)
-                   + e_cmp(sys, alloc.freq, alloc.resolution))
-    per_round_t = jnp.max(t_cmp(sys, alloc.freq, alloc.resolution)
-                          + t_trans(sys, alloc.bandwidth, alloc.power))
     ledger = dict(
-        energy_per_round_J=float(jnp.sum(per_round_e)),
-        time_per_round_s=float(per_round_t),
-        energy_total_J=float(jnp.sum(per_round_e)) * global_rounds,
-        time_total_s=float(per_round_t) * global_rounds,
+        rr.totals(),
         final_accuracy=fl.round_accuracy[-1] if fl.round_accuracy else float("nan"),
-        mean_resolution=float(jnp.mean(alloc.resolution)),
+        mean_resolution=float(jnp.mean(rr.resolutions)),
     )
-    return SimResult(allocation=alloc, fl=fl, ledger=ledger)
+    return SimResult(allocation=alloc, fl=fl, ledger=ledger, rounds=rr)

@@ -1,0 +1,91 @@
+"""Channel substrate tests: `sample_gain` statistics (previously exported but
+untested), dtype preservation, key determinism, and the shadowing drift."""
+import jax
+
+jax.config.update("jax_enable_x64", True)   # match test_fleet/test_dynamics
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sample_gain
+from repro.core.channel import (drift_shadowing, expected_gain,
+                                shadowing_sigma, shadowing_to_gain)
+
+SHADOW_DB = 8.0
+SIGMA = SHADOW_DB * np.log(10.0) / 10.0
+
+
+def test_sample_gain_lognormal_statistics():
+    """E[sample] == expected and std(log sample / expected) == sigma."""
+    n = 200_000
+    expected = jnp.full((n,), 3e-9)
+    g = np.asarray(sample_gain(jax.random.PRNGKey(0), expected, SHADOW_DB))
+    assert (g > 0).all()
+    # linear-scale mean: lognormal with E[X]=1 has var exp(sigma^2)-1
+    rel_se = np.sqrt((np.exp(SIGMA ** 2) - 1.0) / n)
+    assert abs(g.mean() / 3e-9 - 1.0) < 5 * rel_se
+    # log-scale: mean log(g/expected) = -sigma^2/2, std = sigma (tight check)
+    logdev = np.log(g / 3e-9)
+    assert abs(logdev.mean() + SIGMA ** 2 / 2) < 5 * SIGMA / np.sqrt(n)
+    assert abs(logdev.std() - SIGMA) < 0.01 * SIGMA
+
+
+def test_sample_gain_zero_shadowing_is_identity():
+    expected = jnp.asarray([1e-9, 2e-9, 3e-9])
+    g = sample_gain(jax.random.PRNGKey(1), expected, 0.0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expected), rtol=1e-6)
+
+
+def test_sample_gain_dtype_preservation():
+    """The sample dtype follows `expected`, even when x64 is enabled."""
+    for dtype in (jnp.float32, jnp.float64):
+        expected = jnp.ones((16,), dtype) * 1e-9
+        g = sample_gain(jax.random.PRNGKey(2), expected, SHADOW_DB)
+        assert g.dtype == dtype, (g.dtype, dtype)
+
+
+def test_sample_gain_determinism_under_key_splitting():
+    expected = jnp.ones((32,)) * 1e-9
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    a = np.asarray(sample_gain(k1, expected, SHADOW_DB))
+    b = np.asarray(sample_gain(k1, expected, SHADOW_DB))
+    c = np.asarray(sample_gain(k2, expected, SHADOW_DB))
+    np.testing.assert_array_equal(a, b)          # same key -> same draw
+    assert np.any(a != c)                        # sibling key -> fresh draw
+    # and independent of other consumers of the parent key
+    np.testing.assert_array_equal(
+        a, np.asarray(sample_gain(jax.random.split(key)[0], expected,
+                                  SHADOW_DB)))
+
+
+def test_shadowing_to_gain_mean_folding():
+    """shadowing_to_gain(expected, 0) sits below expected by exactly the
+    folded-in lognormal mean factor."""
+    expected = jnp.asarray([2e-9])
+    g0 = float(shadowing_to_gain(expected, jnp.zeros((1,)), SHADOW_DB)[0])
+    assert g0 < 2e-9
+    np.testing.assert_allclose(g0 * np.exp(SIGMA ** 2 / 2), 2e-9, rtol=1e-6)
+    assert shadowing_sigma(SHADOW_DB) == float(SIGMA)
+
+
+def test_drift_shadowing_stationary_and_correlated():
+    """AR(1) drift: rho=1 is frozen, rho=0 is iid, and the stationary std
+    stays ~1 so E[gain] is preserved through shadowing_to_gain."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (50_000,))
+    x1 = drift_shadowing(jax.random.fold_in(key, 1), x, 1.0)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x))
+    x0 = drift_shadowing(jax.random.fold_in(key, 2), x, 0.0)
+    corr = np.corrcoef(np.asarray(x), np.asarray(x0))[0, 1]
+    assert abs(corr) < 0.02
+    xr = drift_shadowing(jax.random.fold_in(key, 3), x, 0.9)
+    assert abs(float(jnp.std(xr)) - 1.0) < 0.02
+    assert np.corrcoef(np.asarray(x), np.asarray(xr))[0, 1] > 0.85
+
+
+def test_expected_gain_positive_and_deterministic():
+    g1 = expected_gain(jax.random.PRNGKey(5), 64, 500.0, SHADOW_DB)
+    g2 = expected_gain(jax.random.PRNGKey(5), 64, 500.0, SHADOW_DB)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    assert (np.asarray(g1) > 0).all()

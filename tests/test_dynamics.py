@@ -1,0 +1,241 @@
+"""Round-dynamics engine tests: static-channel parity with the allocate-once
+ledger, channel sampling/drift statistics, participation models, the async
+staleness queue, and fleet/single-cell consistency."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Weights, allocate, allocate_fleet, make_fleet,
+                        make_system, stack_systems)
+from repro.core.energy import e_cmp, e_trans, t_cmp, t_trans
+from repro.dynamics import (RoundsConfig, queue_step, run_rounds,
+                            run_rounds_fleet, staleness_of)
+
+W = Weights(0.5, 0.5, 1.0)
+
+
+def _per_round_ledger(sysp, alloc):
+    e = float(jnp.sum(e_trans(sysp, alloc.bandwidth, alloc.power)
+                      + e_cmp(sysp, alloc.freq, alloc.resolution)))
+    t = float(jnp.max(t_cmp(sysp, alloc.freq, alloc.resolution)
+                      + t_trans(sysp, alloc.bandwidth, alloc.power)))
+    return e, t
+
+
+# ---------------------------------------------------------------------------
+# acceptance: static/full/no-staleness reproduces the allocate-once ledger
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp1_method", ["sweep", "bisect"])
+def test_static_parity_with_allocate_once(sp1_method):
+    sysp = make_system(jax.random.PRNGKey(0), n_devices=8)
+    res = allocate(sysp, W, max_iters=8, sp1_method=sp1_method)
+    e_ref, t_ref = _per_round_ledger(sysp, res.allocation)
+
+    cfg = RoundsConfig(rounds=4, bcd_iters=8, sp1_method=sp1_method)
+    rr = run_rounds(jax.random.PRNGKey(1), sysp, W, cfg)
+    np.testing.assert_allclose(np.asarray(rr.col("energy")), e_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(rr.col("time")), t_ref, rtol=1e-5)
+    # full participation: everything arrives, nothing is late or dropped
+    assert np.all(np.asarray(rr.col("arrived_frac")) == 1.0)
+    assert np.all(np.asarray(rr.col("n_late")) == 0)
+    assert np.all(np.asarray(rr.staleness) == 0)
+    # static channel: the realized gains are the expected gains, every round
+    np.testing.assert_array_equal(np.asarray(rr.gains),
+                                  np.broadcast_to(np.asarray(sysp.gain),
+                                                  rr.gains.shape))
+    # and the per-round resolution record is constant == the final allocation
+    assert rr.resolutions.shape == (4, 8)
+    np.testing.assert_array_equal(
+        np.asarray(rr.resolutions),
+        np.broadcast_to(np.asarray(rr.allocation.resolution),
+                        rr.resolutions.shape))
+
+
+def test_bcd_iters_zero_simulates_init_unchanged():
+    """bcd_iters=0 is the allocate-once mode: the init allocation is held
+    fixed and only the channel/participation dynamics play out."""
+    sysp = make_system(jax.random.PRNGKey(2), n_devices=6)
+    res = allocate(sysp, W, max_iters=8)
+    cfg = RoundsConfig(rounds=3, bcd_iters=0)
+    rr = run_rounds(jax.random.PRNGKey(3), sysp, W, cfg, init=res.allocation)
+    e_ref, t_ref = _per_round_ledger(sysp, res.allocation)
+    np.testing.assert_allclose(np.asarray(rr.col("energy")), e_ref, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(rr.col("time")), t_ref, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(rr.allocation.bandwidth),
+                               np.asarray(res.allocation.bandwidth))
+    assert np.all(np.asarray(rr.col("bcd_iters")) == 0)
+
+
+# ---------------------------------------------------------------------------
+# channel dynamics
+# ---------------------------------------------------------------------------
+
+def test_iid_sampling_varies_rounds_and_preserves_mean():
+    sysp = make_system(jax.random.PRNGKey(4), n_devices=64)
+    cfg = RoundsConfig(rounds=24, channel_mode="iid", bcd_iters=2)
+    rr = run_rounds(jax.random.PRNGKey(5), sysp, W, cfg)
+    g = np.asarray(rr.gains)                       # (R, N)
+    assert np.std(g, axis=0).min() > 0.0           # every device fades
+    # lognormal: E[log g] = log E[g] - sigma^2/2, std[log g] = sigma
+    sigma = 8.0 * np.log(10.0) / 10.0
+    logdev = np.log(g) - np.log(np.asarray(sysp.gain))[None, :]
+    assert abs(logdev.mean() + sigma ** 2 / 2) < 5 * sigma / np.sqrt(g.size)
+    assert abs(logdev.std() - sigma) < 0.1 * sigma
+    # re-allocation responds: the realized energies move round to round
+    assert np.std(np.asarray(rr.col("energy"))) > 0.0
+
+
+def test_markov_drift_is_correlated_across_rounds():
+    sysp = make_system(jax.random.PRNGKey(6), n_devices=48)
+    logs = {}
+    for mode, rho in [("markov", 0.95), ("iid", 0.0)]:
+        cfg = RoundsConfig(rounds=32, channel_mode=mode, drift_rho=rho,
+                           bcd_iters=0)
+        rr = run_rounds(jax.random.PRNGKey(7), sysp, W, cfg,
+                        init=allocate(sysp, W, max_iters=4).allocation)
+        logs[mode] = np.log(np.asarray(rr.gains))
+
+    def lag1(x):   # mean per-device lag-1 autocorrelation of log-gain
+        d = x - x.mean(axis=0, keepdims=True)
+        num = (d[1:] * d[:-1]).sum(axis=0)
+        den = (d * d).sum(axis=0)
+        return float(np.mean(num / np.maximum(den, 1e-30)))
+
+    assert lag1(logs["markov"]) > 0.6
+    assert abs(lag1(logs["iid"])) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# participation models
+# ---------------------------------------------------------------------------
+
+def test_dropout_reduces_energy_and_marks_devices():
+    sysp = make_system(jax.random.PRNGKey(8), n_devices=32)
+    full = run_rounds(jax.random.PRNGKey(9), sysp, W,
+                      RoundsConfig(rounds=6, bcd_iters=4))
+    half = run_rounds(jax.random.PRNGKey(9), sysp, W,
+                      RoundsConfig(rounds=6, bcd_iters=4, dropout_prob=0.5))
+    assert float(jnp.sum(half.col("n_dropped"))) > 0
+    assert float(jnp.sum(half.col("energy"))) < float(jnp.sum(full.col("energy")))
+    codes = np.asarray(half.staleness)
+    dropped = codes == -1
+    assert dropped.any() and (~dropped).any()
+    assert float(jnp.min(half.col("arrived_frac"))) < 1.0
+
+
+def test_straggler_drop_mode():
+    sysp = make_system(jax.random.PRNGKey(10), n_devices=16)
+    cfg = RoundsConfig(rounds=5, bcd_iters=4, participation="drop",
+                       deadline_slack=0.98)
+    rr = run_rounds(jax.random.PRNGKey(11), sysp, W, cfg)
+    # the allocator equalizes makespans near T, so a <1 slack creates misses
+    assert float(jnp.sum(rr.col("n_late"))) > 0
+    assert float(jnp.max(rr.col("arrived_frac"))) < 1.0
+    # dropped stragglers are marked lost, never stale
+    assert set(np.unique(np.asarray(rr.staleness))) <= {-1, 0}
+    # the realized round time never exceeds the deadline the server enforces
+    t = np.asarray(rr.col("time"))
+    assert np.all(t > 0)
+
+
+def test_stale_mode_defers_mass_with_decay():
+    sysp = make_system(jax.random.PRNGKey(12), n_devices=16)
+    kw = dict(rounds=8, bcd_iters=4, participation="stale",
+              deadline_slack=0.98, max_staleness=3)
+    rr = run_rounds(jax.random.PRNGKey(13), sysp, W,
+                    RoundsConfig(staleness_decay=1.0, **kw))
+    codes = np.asarray(rr.staleness)
+    assert codes.max() >= 1 and codes.min() >= 0   # no dropout: nothing lost
+    assert codes.max() <= 3
+    # undecayed stale mass is conserved: total arrived over R rounds can trail
+    # the full-participation total only by what is still in flight at the end
+    w_total = float(jnp.sum(sysp.samples))
+    arrived = float(jnp.sum(rr.col("arrived_frac"))) * w_total
+    in_flight_bound = 3 * w_total
+    assert arrived <= 8 * w_total + 1e-6
+    assert arrived >= 8 * w_total - in_flight_bound
+    # decay < 1 strictly reduces the arrived mass when anything is late
+    rr_dec = run_rounds(jax.random.PRNGKey(13), sysp, W,
+                        RoundsConfig(staleness_decay=0.5, **kw))
+    if float(jnp.sum(rr_dec.col("n_late"))) > 0:
+        assert (float(jnp.sum(rr_dec.col("arrived_frac")))
+                < float(jnp.sum(rr.col("arrived_frac"))))
+
+
+def test_staleness_of_buckets():
+    d = jnp.asarray(2.0)
+    t = jnp.asarray([0.5, 2.0, 2.1, 4.0, 4.1, 100.0])
+    k = staleness_of(t, d, 3)
+    np.testing.assert_array_equal(np.asarray(k), [0, 0, 1, 1, 2, 3])
+
+
+def test_queue_step_pop_shift_push():
+    qw = jnp.asarray([1.0, 2.0, 3.0])
+    qu = jnp.asarray([10.0, 20.0, 30.0])
+    idx = jnp.asarray([0, 2, 0], jnp.int32)
+    pw = jnp.asarray([5.0, 7.0, 0.0])
+    pu = jnp.asarray([50.0, 70.0, 0.0])
+    qw2, qu2, pop_w, pop_u = queue_step(qw, qu, idx, pw, pu)
+    assert float(pop_w) == 1.0 and float(pop_u) == 10.0
+    np.testing.assert_allclose(np.asarray(qw2), [2.0 + 5.0, 3.0, 7.0])
+    np.testing.assert_allclose(np.asarray(qu2), [20.0 + 50.0, 30.0, 70.0])
+    # mass conservation: popped + kept == old total + pushed
+    assert float(pop_w + qw2.sum()) == pytest.approx(float(qw.sum() + pw.sum()))
+
+
+# ---------------------------------------------------------------------------
+# fleet engine
+# ---------------------------------------------------------------------------
+
+def test_fleet_matches_per_cell_runs():
+    fleet = make_fleet(jax.random.PRNGKey(14), n_cells=3, n_devices=6)
+    cfg = RoundsConfig(rounds=4, bcd_iters=4, channel_mode="markov",
+                       participation="stale", deadline_slack=0.99)
+    key = jax.random.PRNGKey(15)
+    rf = run_rounds_fleet(key, fleet, W, cfg)
+    assert rf.ledger.shape == (3, 4, len(rf.columns))
+    cells = [jax.tree_util.tree_map(lambda x: x[c], fleet) for c in range(3)]
+    for c, kc in enumerate(jax.random.split(key, 3)):
+        rc = run_rounds(kc, cells[c], W, cfg)
+        np.testing.assert_allclose(np.asarray(rf.ledger[c]),
+                                   np.asarray(rc.ledger), rtol=1e-9, atol=1e-12)
+        np.testing.assert_array_equal(np.asarray(rf.staleness[c]),
+                                      np.asarray(rc.staleness))
+
+
+def test_fleet_warm_init_round1_converges_fast():
+    """Warm-starting the engine from a solved fleet makes round 1 cheap."""
+    fleet = make_fleet(jax.random.PRNGKey(16), n_cells=2, n_devices=8)
+    cold = allocate_fleet(fleet, W, max_iters=20)
+    assert bool(jnp.all(cold.converged))
+    cfg = RoundsConfig(rounds=2, bcd_iters=6)
+    rr = run_rounds_fleet(jax.random.PRNGKey(17), fleet, W, cfg,
+                          init=cold.allocation)
+    iters_r1 = np.asarray(rr.col("bcd_iters"))[:, 0]
+    assert np.all(iters_r1 <= 2)
+    assert np.all(np.asarray(rr.col("bcd_converged")) == 1.0)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        RoundsConfig(channel_mode="rayleigh")
+    with pytest.raises(ValueError):
+        RoundsConfig(participation="sometimes")
+    with pytest.raises(ValueError):
+        RoundsConfig(rounds=0)
+    # bcd_iters=0 never solves -> a straggler deadline needs an init with T
+    # (silently everything-late garbage otherwise)
+    sysp = make_system(jax.random.PRNGKey(18), n_devices=4)
+    cfg = RoundsConfig(rounds=2, bcd_iters=0, participation="drop")
+    with pytest.raises(ValueError, match="makespan T"):
+        run_rounds(jax.random.PRNGKey(19), sysp, W, cfg)
+    from repro.core.types import Allocation
+    bad = Allocation(bandwidth=sysp.gain, power=sysp.gain, freq=sysp.gain,
+                     resolution=sysp.gain)   # T=None
+    with pytest.raises(ValueError, match="makespan T"):
+        run_rounds(jax.random.PRNGKey(19), sysp, W, cfg, init=bad)

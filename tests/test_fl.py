@@ -10,8 +10,9 @@ except ImportError:  # minimal install: property tests degrade to skips
     from _hypothesis_stub import given, settings, st
 
 from repro.core import Weights, make_system
-from repro.fl import (fedavg, local_train, make_eval_set,
-                      make_federated_dataset, render, run_federated, simulate)
+from repro.fl import (fedavg, fedavg_stale, local_train, make_eval_set,
+                      make_federated_dataset, map_resolution_to_dataset,
+                      render, resolve_eval_resolution, run_federated, simulate)
 from repro.models.cnn import accuracy, apply_cnn, init_cnn, xent_loss
 
 
@@ -103,6 +104,104 @@ def test_simulator_ledger_consistent():
     assert led["energy_total_J"] == pytest.approx(
         led["energy_per_round_J"] * 2, rel=1e-6)
     assert led["time_total_s"] > 0 and np.isfinite(led["final_accuracy"])
+
+
+def test_eval_resolution_zero_is_not_median():
+    """`eval_resolution or median` swallowed the falsy 0 override into the
+    median; an explicit 0 now fails loudly (render would ZeroDivisionError)
+    instead of silently evaluating at the median resolution."""
+    with pytest.raises(ValueError, match="eval_resolution"):
+        resolve_eval_resolution(0, [4, 8, 16])
+    assert resolve_eval_resolution(None, [4, 8, 16]) == 8
+    assert resolve_eval_resolution(4, [4, 8, 16]) == 4
+    # works on jnp arrays of resolutions too (the vectorized mapper output)
+    assert resolve_eval_resolution(None, jnp.asarray([16, 4, 8])) == 8
+
+
+def test_map_resolution_to_dataset_vectorized():
+    """jnp argmin snap onto the menu: jit-safe, returns an int array."""
+    sysp = make_system(jax.random.PRNGKey(20), n_devices=4)
+    # menu is (160, 320, 480, 640); dataset grid is (4, 8, 12, 16)
+    s = jnp.asarray([150.0, 320.0, 500.0, 640.0])
+    out = map_resolution_to_dataset(sysp, s, (4, 8, 12, 16))
+    assert jnp.issubdtype(out.dtype, jnp.integer)
+    np.testing.assert_array_equal(np.asarray(out), [4, 8, 12, 16])
+    # shorter dataset menus clip to the last entry
+    out2 = map_resolution_to_dataset(sysp, s, (4, 8))
+    np.testing.assert_array_equal(np.asarray(out2), [4, 8, 8, 8])
+    # jit-safe (usable inside a scan)
+    out3 = jax.jit(
+        lambda r: map_resolution_to_dataset(sysp, r, (4, 8, 12, 16)))(s)
+    np.testing.assert_array_equal(np.asarray(out3), np.asarray(out))
+
+
+def test_fedavg_stale_anchor_semantics():
+    p1 = {"a": jnp.ones((2,))}
+    p2 = {"a": jnp.zeros((2,))}
+    glob = {"a": jnp.full((2,), 0.5)}
+    # full on-time participation == plain fedavg
+    out = fedavg_stale(glob, [p1, p2], [3.0, 1.0], 4.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.75)
+    # nothing arrives -> global unchanged
+    out = fedavg_stale(glob, [], [], 4.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.5)
+    # discounted mass anchors to the global model: one update of mass 2
+    # (decayed from 4) against total 4 -> half update, half anchor
+    out = fedavg_stale(glob, [p1], [2.0], 4.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.75)
+
+
+def test_run_federated_staleness_codes():
+    key = jax.random.PRNGKey(21)
+    ds = make_federated_dataset(key, n_clients=2, per_client=16,
+                                num_classes=3, base_resolution=8)
+    # client 1 always lost -> equivalent to training client 0 alone
+    stale = np.zeros((3, 2), np.int32)
+    stale[:, 1] = -1
+    r = run_federated(jax.random.PRNGKey(22), ds, [8, 8], global_rounds=3,
+                      local_iters=2, lr=0.05, eval_n=32, staleness=stale)
+    ds1 = make_federated_dataset(key, n_clients=2, per_client=16,
+                                 num_classes=3, base_resolution=8)
+    # a stale code defers client 1's influence but keeps the run finite;
+    # an arrival past the horizon (round 2 + lateness 2 >= 3) is pruned
+    stale2 = np.zeros((3, 2), np.int32)
+    stale2[0, 1] = 1
+    stale2[2, 1] = 2
+    r2 = run_federated(jax.random.PRNGKey(22), ds1, [8, 8], global_rounds=3,
+                       local_iters=2, lr=0.05, eval_n=32, staleness=stale2)
+    for res in (r, r2):
+        assert len(res.round_loss) == 3
+        assert np.isfinite(res.round_accuracy[-1])
+    # all updates lost in a round -> params freeze through that round
+    stale3 = -np.ones((2, 2), np.int32)
+    r3 = run_federated(jax.random.PRNGKey(22), ds1, [8, 8], global_rounds=2,
+                       local_iters=2, lr=0.05, eval_n=32, staleness=stale3)
+    assert np.isnan(r3.round_loss[0])
+    assert r3.round_accuracy[0] == r3.round_accuracy[1]
+
+
+def test_simulate_dynamics_end_to_end():
+    """The dynamics path threads engine staleness codes into run_federated:
+    the rounds override, the (R, N) staleness shape, and a finite FL run."""
+    from repro.dynamics import RoundsConfig
+
+    key = jax.random.PRNGKey(30)
+    sysp = make_system(key, n_devices=4)
+    cfg = RoundsConfig(rounds=99, channel_mode="markov", drift_rho=0.9,
+                       bcd_iters=3, bcd_tol=1e-3, participation="stale",
+                       dropout_prob=0.2, deadline_slack=0.99)
+    res = simulate(jax.random.fold_in(key, 1), sysp, Weights(0.5, 0.5, 10.0),
+                   dataset_resolutions=(4, 8, 12, 16), global_rounds=3,
+                   local_iters=2, dynamics=cfg)
+    # rounds forced to global_rounds regardless of the config's value
+    assert res.rounds.ledger.shape[0] == 3
+    assert res.rounds.staleness.shape == (3, 4)
+    assert len(res.fl.round_loss) == 3
+    assert np.isfinite(res.ledger["final_accuracy"])
+    assert 0.0 <= res.ledger["mean_arrived_frac"] <= 1.0
+    # with a 20% dropout over 3x4 device-rounds, some codes should be lost
+    codes = np.asarray(res.rounds.staleness)
+    assert codes.min() >= -1 and codes.max() <= cfg.max_staleness
 
 
 def test_cnn_resolution_agnostic():
