@@ -228,6 +228,71 @@ def fleet_scale():
          f"wall_s={t1 - t0:.1f}")
 
 
+def region_scale():
+    """Region sharding acceptance row: the fleet row's 64 x 2048 workload
+    solved on 1 device via `allocate_fleet` vs sharded over all local
+    devices via `allocate_region` (shard_map: each shard's BCD while_loop
+    exits when its own cells converge instead of the global lockstep — on
+    the 2-core recording host that early exit is what pushes the speedup
+    past the core-count ceiling). Run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 to expose a mesh on
+    one CPU host. Also reports the SP2-direct carried-bracket dual-search
+    eval count (ledger `sp2_iters` column) vs the non-carried reference."""
+    from repro.core.sp2 import direct_eval_counts
+    from repro.region import allocate_region, region_mesh
+
+    import os
+    import statistics
+
+    C, N = 64, 2048
+    key = jax.random.PRNGKey(31)
+    fleet = make_fleet(key, n_cells=C, n_devices=N,
+                       bandwidth_total=20e6 * N / 50)
+    w = Weights(0.5, 0.5, 1.0)
+    ndev = jax.device_count()
+    cores = os.cpu_count() or 1
+
+    def median_wall(fn, reps=3):
+        fn()   # compile / warm
+        walls = []
+        for _ in range(reps):
+            t0 = time.time()
+            fn()
+            walls.append(time.time() - t0)
+        return statistics.median(walls)
+
+    res1 = allocate_fleet(fleet, w, max_iters=8)
+    t_1dev = median_wall(lambda: jax.block_until_ready(
+        allocate_fleet(fleet, w, max_iters=8).allocation.bandwidth))
+    walls = {}
+    for nd in sorted({min(4, ndev), ndev}):
+        if nd <= 1:
+            continue
+        mesh = region_mesh(nd)
+        walls[nd] = median_wall(lambda m=mesh: jax.block_until_ready(
+            allocate_region(fleet, w, max_iters=8,
+                            mesh=m).fleet.allocation.bandwidth))
+    reg = allocate_region(fleet, w, max_iters=8, mesh=region_mesh())
+
+    # measured SP2 dual-search evals (sp2_iters ledger col) vs reference
+    led = jnp.asarray(res1.history)                      # (C, it, cols)
+    ev = float(jnp.nanmean(led[..., 4]))
+    ev_ref = direct_eval_counts(res1.objective.dtype)
+    conv = int(jnp.sum(reg.converged))
+    t_shard = walls.get(ndev, t_1dev)
+    scaling = ";".join(
+        f"speedup_{nd}dev={t_1dev / max(wl, 1e-9):.2f}x"
+        for nd, wl in sorted(walls.items()))
+    t0 = time.time()
+    _row(f"region.C{C}.N{N}", t0, t0 + t_shard,
+         f"devices={C * N};mesh={ndev};host_cores={cores};"
+         f"wall_1dev_s={t_1dev:.1f};wall_shard_s={t_shard:.1f};{scaling};"
+         f"cells_converged={conv}/{C};"
+         f"mean_obj={float(jnp.nanmean(reg.objective)):.4g};"
+         f"sp2_evals_per_iter={ev:.0f}_vs_ref_{ev_ref}"
+         f"({ev_ref / max(ev, 1.0):.1f}x)")
+
+
 def rounds_dynamics():
     """Round-dynamics engine acceptance row: R=32 rounds x C=64 cells x
     N=2048 devices as ONE jitted scan (vmap'd over cells, no per-round host
@@ -382,6 +447,7 @@ BENCHES = {
     "fig9": fig9_vs_scheme1,
     "scaling": table_allocator_scaling,
     "fleet": fleet_scale,
+    "region": region_scale,
     "rounds": rounds_dynamics,
     "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,

@@ -27,7 +27,10 @@ from .types import Allocation, SystemParams, Weights
 
 Array = jnp.ndarray
 
-# ledger column order (one row per BCD iteration)
+# ledger column order (one row per BCD iteration). sp2_iters: Jong outer
+# iterations for sp2_method="jong"; for "direct" it carries the measured
+# dE/dB evaluation count of the carried-bracket dual search (compare
+# against sp2.direct_eval_counts for the non-carried reference).
 _LEDGER_COLS = ("objective", "energy", "time", "accuracy",
                 "sp2_iters", "sp2_residual", "rel_step")
 _FIXED_COLS = ("energy", "time", "accuracy", "rel_step")
@@ -60,10 +63,22 @@ class FleetResult:
 
 def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
                        bandwidth_frac: float = 1.0) -> Allocation:
-    """Feasible start: p = pmax, B = B/N (paper init; Fig. 9 uses B/(2N))."""
+    """Feasible start: p = pmax, B = B/N (paper init; Fig. 9 uses B/(2N)).
+
+    On a padded system (`sys.active` set) the bandwidth split divides by the
+    ACTIVE device count and pad lanes start at B = 0, so the active prefix
+    of a padded solve starts (and therefore iterates) bit-identically to the
+    unpadded one."""
     n = sys.n
+    if sys.active is None:
+        bw = jnp.full((n,), sys.bandwidth_total / n * bandwidth_frac)
+    else:
+        n_eff = jnp.sum(sys.active.astype(jnp.asarray(sys.gain).dtype))
+        share = sys.bandwidth_total / n_eff * bandwidth_frac
+        bw = jnp.where(sys.active, share,
+                       jnp.zeros((), jnp.asarray(share).dtype))
     return Allocation(
-        bandwidth=jnp.full((n,), sys.bandwidth_total / n * bandwidth_frac),
+        bandwidth=bw,
         power=jnp.full((n,), sys.p_max),
         freq=jnp.full((n,), sys.f_max),
         resolution=jnp.full((n,), sys.s_lo),
@@ -79,7 +94,7 @@ def _init_carry_state(sys: SystemParams, alloc: Allocation):
             jnp.asarray(s_hat), jnp.asarray(T, dtype))
 
 
-def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
+def _bcd_while(state0, max_iters: int, ncols: int, tol, step, mask=None):
     """Shared BCD driver: fixed-size NaN ledger, on-device convergence on the
     relative (B, p, f, s) step, one `lax.while_loop`. `step(state)` performs
     one block-coordinate update and returns (new_state, metric scalars); the
@@ -90,13 +105,23 @@ def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
     progress), so the old raw tol=1e-6 sat exactly at the noise floor and
     fleet cells reported "not converged" forever — the 12/64 fleet
     convergence-rate bug. Movement below the floor is numerical noise.
-    Returns (*state, iters, converged, ledger)."""
+
+    `mask` (an (N,) bool, `sys.active`) zeroes padded-out devices in the
+    rel-step norms: their (constant) iterates would otherwise inflate the
+    denominator and desync the convergence trajectory from the unpadded
+    solve. Returns (*state, iters, converged, ledger)."""
     dtype = state0[0].dtype
+    m4 = None if mask is None else jnp.concatenate([mask] * 4)
+
+    def flat(state):
+        v = jnp.concatenate([state[0], state[1], state[2], state[3]])
+        return v if m4 is None else jnp.where(m4, v, jnp.zeros((), dtype))
+
     ledger0 = jnp.full((max_iters, ncols), jnp.nan, dtype)
     if max_iters == 0:   # nothing to iterate: return the start point untouched
         return (*state0, jnp.zeros((), jnp.int32), jnp.zeros((), bool), ledger0)
     tol = jnp.maximum(jnp.asarray(tol, dtype), 64.0 * jnp.finfo(dtype).eps)
-    prev0 = jnp.concatenate([state0[0], state0[1], state0[2], state0[3]])
+    prev0 = flat(state0)
 
     def cond(c):
         k, _, _, conv, _ = c
@@ -105,7 +130,7 @@ def _bcd_while(state0, max_iters: int, ncols: int, tol, step):
     def body(c):
         k, state, prev, _, ledger = c
         state, metrics = step(state)
-        cur = jnp.concatenate([state[0], state[1], state[2], state[3]])
+        cur = flat(state)
         rel = jnp.linalg.norm(cur - prev) \
             / jnp.maximum(jnp.linalg.norm(prev), 1e-12)
         row = jnp.stack([*(m.astype(dtype) for m in metrics),
@@ -136,8 +161,10 @@ def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
         f, s, s_hat, T = solve_sp1(sys, warr_sp1, acc, tt)
         rmin = r_min(sys, f, s, T)
         if sp2_method == "direct":
-            p_new, B_new = _sp2_direct_impl(sys, rmin)
-            sp2_it = jnp.zeros((), dtype)
+            # sp2_iters ledger column = measured dE/dB eval count of the
+            # carried-bracket dual search (vs `sp2.direct_eval_counts`)
+            p_new, B_new, ev = _sp2_direct_impl(sys, rmin)
+            sp2_it = ev.astype(dtype)
             sp2_res = jnp.zeros((), dtype)
         else:
             p_new, B_new, _, _, it2, res2 = _sp2_jong_core(
@@ -150,11 +177,12 @@ def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
         metrics = (en.objective(sys, w, acc, alloc),
                    en.total_energy(sys, alloc),
                    en.total_time(sys, alloc),
-                   en.total_accuracy(acc, alloc),
+                   en.total_accuracy(acc, alloc, sys.active),
                    sp2_it, sp2_res)
         return (B_new, p_new, f, s, s_hat, T), metrics
 
-    return _bcd_while(state0, max_iters, len(_LEDGER_COLS), tol, step)
+    return _bcd_while(state0, max_iters, len(_LEDGER_COLS), tol, step,
+                      mask=sys.active)
 
 
 def _materialize_history(ledger: np.ndarray, iters: int,
@@ -172,7 +200,8 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
              max_iters: int = 20, tol: float = 1e-6,
              init: Optional[Allocation] = None,
              sp2_iters: int = 30, sp2_method: str = "direct",
-             sp1_method: str = "sweep") -> BCDResult:
+             sp1_method: str = "sweep",
+             keep_history: bool = True) -> BCDResult:
     """Algorithm 2: alternate SP1 (f, s, T) and SP2 (p, B) until convergence.
 
     sp1_method: "sweep" (batched T-grid dual sweep, the default) or "bisect"
@@ -182,6 +211,11 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
     The whole BCD iteration compiles to one jitted computation; convergence
     is decided on device and the history ledger crosses the host boundary
     exactly once, at the end.
+
+    keep_history=False skips that one device->host ledger copy entirely
+    (history comes back []); only the objective scalar is pulled. This is
+    the service hot path — per-request latency is dominated by transfers
+    once the solve is warm-started.
     """
     acc = acc if acc is not None else default_accuracy()
     w = w.normalized()
@@ -192,11 +226,15 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
         sys, warr, acc, state0, max_iters, tol, sp1_method, sp2_method,
         sp2_iters)
     iters = int(iters)
-    history = _materialize_history(np.asarray(ledger), iters, _LEDGER_COLS)
+    if keep_history:
+        history = _materialize_history(np.asarray(ledger), iters, _LEDGER_COLS)
+        objective = history[-1]["objective"] if history else float("nan")
+    else:
+        history = []
+        objective = float(ledger[iters - 1, 0]) if iters else float("nan")
     allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
                             s_relaxed=s_hat, T=T) if iters else alloc0
-    return BCDResult(allocation=allocation,
-                     objective=history[-1]["objective"] if history else float("nan"),
+    return BCDResult(allocation=allocation, objective=objective,
                      history=history, iters=iters, converged=bool(conv))
 
 
@@ -243,7 +281,7 @@ def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
         # E_cmp = kappa cyc^3/(T-tt)^2 rises, E_trans falls; golden section).
         tt_opt = _optimal_split(sys, s, B, T_round)
         rmin = sys.bits / tt_opt
-        p_new, B_new = _sp2_direct_impl(sys, rmin)
+        p_new, B_new, _ = _sp2_direct_impl(sys, rmin)
         # recompute f against the achieved transmission time
         tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
         cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
@@ -253,11 +291,12 @@ def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                            T=jnp.asarray(T_round, dtype))
         metrics = (en.total_energy(sys, alloc),
                    en.total_time(sys, alloc),
-                   en.total_accuracy(acc, alloc))
+                   en.total_accuracy(acc, alloc, sys.active))
         return (B_new, p_new, f, s, s_hat,
                 jnp.asarray(T_round, dtype)), metrics
 
-    return _bcd_while(state0, max_iters, len(_FIXED_COLS), tol, step)
+    return _bcd_while(state0, max_iters, len(_FIXED_COLS), tol, step,
+                      mask=sys.active)
 
 
 def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
@@ -296,7 +335,11 @@ def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
     become (C, N), per-cell scalars become (C,). Cells may differ in any
     numeric scalar (bandwidth_total, p_max, ... are traced leaves), so mixed
     cell classes batch through one vmap'd solve; only the static aux data —
-    the discrete resolution menu — must match across cells."""
+    the discrete resolution menu — must match across cells.
+
+    Pad-safe: if any cell carries an `active` mask (`pad_system`), cells
+    without one get an all-True mask so the pytree structures agree — a
+    bucketed batch may mix padded and exactly-sized cells."""
     from .types import _SYS_STATIC
 
     aux = tuple(getattr(systems[0], k) for k in _SYS_STATIC)
@@ -304,7 +347,42 @@ def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
         if tuple(getattr(s_, k) for k in _SYS_STATIC) != aux:
             raise ValueError(
                 "stack_systems: cells differ in static config (resolutions)")
+    if any(s_.active is not None for s_ in systems):
+        systems = [s_ if s_.active is not None else
+                   s_.replace(active=jnp.ones(jnp.asarray(s_.gain).shape,
+                                              bool))
+                   for s_ in systems]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *systems)
+
+
+def _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
+                   sp2_iters, with_init: bool):
+    """Per-cell solver closure shared by `allocate_fleet` (plain vmap) and
+    `region.allocate_region` (vmap inside shard_map)."""
+    def warm(sysc, alloc0):
+        state0 = _init_carry_state(sysc, alloc0)
+        return _allocate_impl(sysc, warr, acc, state0, max_iters, tol,
+                              sp1_method, sp2_method, sp2_iters)
+
+    if with_init:
+        return warm
+    return lambda sysc: warm(sysc, initial_allocation(sysc))
+
+
+def _fleet_result(out, max_iters: int, dtype) -> FleetResult:
+    """Assemble a FleetResult from the stacked raw `_allocate_impl` outputs
+    (all leaves carry a leading cell axis)."""
+    B, p, f, s, s_hat, T, iters, conv, ledger = out
+    if max_iters > 0:
+        idx = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
+        last = jnp.take_along_axis(ledger[..., 0], idx[:, None], axis=1)[:, 0]
+        objective = jnp.where(iters > 0, last, jnp.nan)
+    else:
+        objective = jnp.full(iters.shape, jnp.nan, dtype)
+    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
+                            s_relaxed=s_hat, T=T)
+    return FleetResult(allocation=allocation, objective=objective,
+                       iters=iters, converged=conv, history=ledger)
 
 
 def allocate_fleet(sys_batch: SystemParams, w: Weights,
@@ -325,30 +403,16 @@ def allocate_fleet(sys_batch: SystemParams, w: Weights,
     init: optional warm-start Allocation with (C, N) leaves (e.g. a previous
     FleetResult.allocation); a warm start near the solution converges in a
     couple of BCD iterations instead of a cold solve.
+
+    To shard the cell axis across a device mesh, see
+    `repro.region.allocate_region`.
     """
     acc = acc if acc is not None else default_accuracy()
     w = w.normalized()
     dtype = jnp.asarray(sys_batch.gain).dtype
     warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-
-    def one_cell(sysc, alloc0):
-        state0 = _init_carry_state(sysc, alloc0)
-        return _allocate_impl(sysc, warr, acc, state0, max_iters, tol,
-                              sp1_method, sp2_method, sp2_iters)
-
-    if init is None:
-        out = jax.vmap(lambda sysc: one_cell(sysc, initial_allocation(sysc)))(
-            sys_batch)
-    else:
-        out = jax.vmap(one_cell)(sys_batch, init)
-    B, p, f, s, s_hat, T, iters, conv, ledger = out
-    if max_iters > 0:
-        idx = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
-        last = jnp.take_along_axis(ledger[..., 0], idx[:, None], axis=1)[:, 0]
-        objective = jnp.where(iters > 0, last, jnp.nan)
-    else:
-        objective = jnp.full(iters.shape, jnp.nan, dtype)
-    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
-                            s_relaxed=s_hat, T=T)
-    return FleetResult(allocation=allocation, objective=objective,
-                       iters=iters, converged=conv, history=ledger)
+    fn = _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
+                        sp2_iters, with_init=init is not None)
+    out = jax.vmap(fn)(sys_batch) if init is None \
+        else jax.vmap(fn)(sys_batch, init)
+    return _fleet_result(out, max_iters, dtype)

@@ -1,12 +1,26 @@
 """System model: rate, time, energy, and the paper's objective (eqs. 1-13)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from .types import Allocation, SystemParams, Weights
 from .accuracy import AccuracyModel
 
 Array = jnp.ndarray
+
+
+def _masked(x: Array, active) -> Array:
+    """Zero out padded-out devices before a sum/max reduction.
+
+    `active=None` returns `x` untouched (the mask-free path); an all-True
+    mask multiplies through `where(True, x, 0) == x` bit-exactly, and time/
+    energy/accuracy are nonnegative so 0 is neutral for both sum and max —
+    the active prefix of a padded system reduces identically."""
+    if active is None:
+        return x
+    return jnp.where(active, x, jnp.zeros((), jnp.asarray(x).dtype))
 
 
 def rate(sys: SystemParams, bandwidth: Array, power: Array) -> Array:
@@ -42,16 +56,17 @@ def e_trans(sys: SystemParams, bandwidth: Array, power: Array) -> Array:
 
 
 def total_energy(sys: SystemParams, alloc: Allocation) -> Array:
-    """E = R_g sum_n (E_trans + E_cmp)  (eq. 9)."""
-    return sys.global_rounds * jnp.sum(
+    """E = R_g sum_n (E_trans + E_cmp)  (eq. 9). Padded devices excluded."""
+    return sys.global_rounds * jnp.sum(_masked(
         e_trans(sys, alloc.bandwidth, alloc.power)
-        + e_cmp(sys, alloc.freq, alloc.resolution))
+        + e_cmp(sys, alloc.freq, alloc.resolution), sys.active))
 
 
 def round_time(sys: SystemParams, alloc: Allocation) -> Array:
-    """Per-round makespan max_n (T_cmp + T_trans)."""
-    return jnp.max(t_cmp(sys, alloc.freq, alloc.resolution)
-                   + t_trans(sys, alloc.bandwidth, alloc.power))
+    """Per-round makespan max_n (T_cmp + T_trans). Padded devices excluded."""
+    return jnp.max(_masked(t_cmp(sys, alloc.freq, alloc.resolution)
+                           + t_trans(sys, alloc.bandwidth, alloc.power),
+                           sys.active))
 
 
 def total_time(sys: SystemParams, alloc: Allocation) -> Array:
@@ -59,16 +74,19 @@ def total_time(sys: SystemParams, alloc: Allocation) -> Array:
     return sys.global_rounds * round_time(sys, alloc)
 
 
-def total_accuracy(acc: AccuracyModel, alloc: Allocation) -> Array:
-    """A = sum_n A_n(s_n)  (§III-C)."""
-    return jnp.sum(acc.value(alloc.resolution))
+def total_accuracy(acc: AccuracyModel, alloc: Allocation,
+                   active: Optional[Array] = None) -> Array:
+    """A = sum_n A_n(s_n)  (§III-C). `active` excludes padded devices (their
+    resolution clips to s_hi during the solve, which would otherwise add a
+    phantom accuracy term per pad lane)."""
+    return jnp.sum(_masked(acc.value(alloc.resolution), active))
 
 
 def objective(sys: SystemParams, w: Weights, acc: AccuracyModel, alloc: Allocation) -> Array:
     """w1 E + w2 T - rho A  (eq. 12)."""
     return (w.w1 * total_energy(sys, alloc)
             + w.w2 * total_time(sys, alloc)
-            - w.rho * total_accuracy(acc, alloc))
+            - w.rho * total_accuracy(acc, alloc, sys.active))
 
 
 def feasible(sys: SystemParams, alloc: Allocation, atol: float = 1e-6) -> bool:
@@ -88,7 +106,7 @@ def summarize(sys: SystemParams, w: Weights, acc: AccuracyModel, alloc: Allocati
     return dict(
         energy_J=float(total_energy(sys, alloc)),
         time_s=float(total_time(sys, alloc)),
-        accuracy=float(total_accuracy(acc, alloc)),
+        accuracy=float(total_accuracy(acc, alloc, sys.active)),
         objective=float(objective(sys, w, acc, alloc)),
         energy_trans_J=float(sys.global_rounds * jnp.sum(e_trans(sys, alloc.bandwidth, alloc.power))),
         energy_cmp_J=float(sys.global_rounds * jnp.sum(e_cmp(sys, alloc.freq, alloc.resolution))),

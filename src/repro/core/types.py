@@ -51,7 +51,15 @@ class SystemParams:
     so cells with different bandwidth/power budgets batch through one vmap'd
     solve (heterogeneous fleets). Only `resolutions` — which fixes array
     shapes and the discrete s-menu — stays static. Solver code must therefore
-    treat these scalars as traced values (jnp ops, no float()/Python max)."""
+    treat these scalars as traced values (jnp ops, no float()/Python max).
+
+    `active` is an optional (N,) bool mask marking padded-out devices
+    (`region.batch.pad_system`): masked devices carry zero data/cycles/bits
+    and are excluded from every cross-device reduction (SP1/SP2 duals,
+    makespan, energy, accuracy, BCD convergence) so the active prefix solves
+    bit-identically to the unpadded system. `active=None` (the default)
+    means all devices are real and the solvers take their original,
+    mask-free code paths."""
     # per-device arrays, shape (N,)
     gain: Array          # E[G_n] expected channel gain (linear)
     cycles: Array        # c_n cycles per standard sample
@@ -69,6 +77,8 @@ class SystemParams:
     global_rounds: float # R_g
     resolutions: tuple   # (s_bar_1..s_bar_M), ascending — static aux
     s_standard: float
+    # optional (N,) bool: False = padded-out device (see pad_system)
+    active: Optional[Array] = None
 
     @property
     def n(self) -> int:
@@ -129,12 +139,14 @@ jax.tree_util.register_pytree_node(
 )
 
 # Numeric per-cell scalars: pytree LEAVES (traced; may differ per cell in a
-# stacked fleet). `resolutions` is the only static aux datum.
+# stacked fleet). `resolutions` is the only static aux datum. `active` is a
+# child too: None (no mask) flattens to an empty subtree, an array mask to a
+# leaf — systems in one stacked fleet must agree on having a mask or not.
 _SYS_SCALARS = ("bandwidth_total", "noise_psd", "p_min", "p_max", "f_min",
                 "f_max", "kappa", "local_iters", "global_rounds", "s_standard")
 _SYS_ARRAYS = ("gain", "cycles", "samples", "bits")
 _SYS_STATIC = ("resolutions",)
-_SYS_LEAVES = _SYS_ARRAYS + _SYS_SCALARS
+_SYS_LEAVES = _SYS_ARRAYS + _SYS_SCALARS + ("active",)
 
 jax.tree_util.register_pytree_node(
     SystemParams,

@@ -98,6 +98,8 @@ def _cell_engine(sys: SystemParams, warr: Array, acc: AccuracyModel,
             active = ~jax.random.bernoulli(k_drop, cfg.dropout_prob, (n,))
         else:
             active = jnp.ones((n,), bool)
+        if sys.active is not None:   # padded-out lanes never participate
+            active &= sys.active
         deadline = jnp.asarray(cfg.deadline_slack, dtype) * T
 
         if cfg.participation == "full":

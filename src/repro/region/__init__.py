@@ -1,0 +1,29 @@
+"""repro.region — region-scale sharded allocation service (beyond paper).
+
+The paper solves one cell of N MAR devices; this package turns the
+single-host `allocate_fleet`/`run_rounds_fleet` pair into a service for a
+*region* — many heterogeneous cells, millions of clients — in three layers:
+
+  * mesh   (`region.mesh`):  shard the cell axis of a stacked fleet across
+    a device mesh (`region_mesh`, `allocate_region`, `run_rounds_region`);
+  * batch  (`region.batch`): pad mixed-size cell pools onto a power-of-two
+    bucket menu with masked devices (`pad_system`, `bucket_size`) so real
+    traffic compiles into a handful of shapes;
+  * service (`region.service`): a streaming front-end (`RegionAllocator`)
+    that coalesces allocation requests into bucketed shard-ready batches
+    and warm-starts re-requests from an LRU cache of previous solutions.
+
+CPU dev recipe: XLA_FLAGS=--xla_force_host_platform_device_count=8 makes
+one host expose 8 devices for the mesh (see ROADMAP "Region service").
+"""
+from .batch import bucket_size, pad_allocation, pad_system
+from .mesh import (RegionResult, allocate_region, cell_specs, pad_cells,
+                   place_cells, region_mesh, run_rounds_region)
+from .service import AllocationRequest, CellResponse, RegionAllocator
+
+__all__ = [
+    "bucket_size", "pad_allocation", "pad_system",
+    "RegionResult", "allocate_region", "cell_specs", "pad_cells",
+    "place_cells", "region_mesh", "run_rounds_region",
+    "AllocationRequest", "CellResponse", "RegionAllocator",
+]

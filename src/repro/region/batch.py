@@ -1,0 +1,97 @@
+"""Bucketed request batching: pad mixed-size cell pools onto a power-of-two
+shape menu so region traffic compiles into a handful of XLA programs.
+
+Real traffic arrives as cell pools of mixed device counts; compiling one
+program per distinct N would blow the jit cache (and the compile budget) on
+the service hot path. Instead every pool is padded up to `bucket_size(N)` —
+the next power of two, floored at `min_bucket` — with *masked* devices:
+
+  * zero data (cycles = samples = bits = 0): a padded device computes and
+    uploads nothing, so its SP1 dual contribution is exactly 0 (the
+    `sp1_lambda_sum` kernel's documented zero-lane property) and its
+    makespan is 0;
+  * zero bandwidth demand: `sys.active` collapses its SP2 box to [0, 0], so
+    it is pinned at B = 0 and is bit-neutral in every budget reduction;
+  * excluded from makespan/energy/accuracy via the `active` mask threaded
+    through the sp1/sp2/BCD reductions (see `core.types.SystemParams`).
+
+The active prefix of a padded solve is bit-identical to the unpadded solve
+(property-tested in tests/test_region_padding.py across sweep/bisect SP1
+and f32/f64).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import Allocation, SystemParams
+
+DEFAULT_MIN_BUCKET = 64
+
+
+def bucket_size(n: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
+    """Smallest power-of-two >= n, floored at `min_bucket`: the compiled
+    batch-shape menu for mixed-size cell pools. A trace spanning device
+    counts up to 16x the floor compiles at most 5 distinct shapes."""
+    if n <= 0:
+        raise ValueError(f"bucket_size: need n >= 1, got {n}")
+    return max(min_bucket, 1 << (n - 1).bit_length())
+
+
+def _pad_tail(x, pad: int, fill):
+    x = jnp.asarray(x)
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+def pad_system(sys: SystemParams, n_pad: int) -> SystemParams:
+    """Pad a SystemParams to `n_pad` devices with masked, data-free lanes.
+
+    The result always carries an `active` mask (all-True over the original
+    prefix), even when n_pad == N — so systems from different pools stack
+    into one batch with a consistent pytree structure. Padded lanes get
+    gain = 1 (any positive value; it only guards divisions), zero cycles/
+    samples/bits, and active = False."""
+    n = sys.n
+    if n_pad < n:
+        raise ValueError(f"pad_system: n_pad={n_pad} < n={n}")
+    pad = n_pad - n
+    active = sys.active if sys.active is not None \
+        else jnp.ones((n,), bool)
+    return sys.replace(
+        gain=_pad_tail(sys.gain, pad, 1.0),
+        cycles=_pad_tail(sys.cycles, pad, 0.0),
+        samples=_pad_tail(sys.samples, pad, 0.0),
+        bits=_pad_tail(sys.bits, pad, 0.0),
+        active=jnp.concatenate([active, jnp.zeros((pad,), bool)]),
+    )
+
+
+def pad_allocation(alloc: Allocation, n_pad: int,
+                   sys: SystemParams) -> Allocation:
+    """Pad a warm-start Allocation to `n_pad` devices.
+
+    Pad lanes are filled with the masked solve's fixed point (B = 0,
+    p = p_min, f = f_min, s = s_hi): warm-starting there contributes zero
+    movement to the (masked) BCD rel-step, so a cached solution behaves
+    exactly like its unpadded warm start. `sys` supplies the box values
+    (p_min/f_min/s_hi may be per-cell traced leaves)."""
+    n = jnp.asarray(alloc.bandwidth).shape[0]
+    pad = int(n_pad) - int(n)
+    if pad < 0:
+        raise ValueError(f"pad_allocation: n_pad={n_pad} < n={n}")
+    if pad == 0:
+        return alloc
+    dt = jnp.asarray(alloc.bandwidth).dtype
+
+    def tail(fill):
+        return jnp.full((pad,), fill, dt)
+
+    return Allocation(
+        bandwidth=jnp.concatenate([alloc.bandwidth, tail(0.0)]),
+        power=jnp.concatenate([jnp.asarray(alloc.power, dt), tail(sys.p_min)]),
+        freq=jnp.concatenate([jnp.asarray(alloc.freq, dt), tail(sys.f_min)]),
+        resolution=jnp.concatenate([jnp.asarray(alloc.resolution, dt),
+                                    tail(sys.s_hi)]),
+        s_relaxed=None if alloc.s_relaxed is None else jnp.concatenate(
+            [jnp.asarray(alloc.s_relaxed, dt), tail(sys.s_hi)]),
+        T=alloc.T,
+    )

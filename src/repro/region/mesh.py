@@ -1,0 +1,264 @@
+"""Mesh layer: shard the cell axis of a stacked fleet across local devices.
+
+`allocate_fleet` vmaps the jitted BCD across cells on ONE device; a region
+is C cells x N devices where C x N is millions of clients, so the cell axis
+must spread over a device mesh. Two execution modes:
+
+  * `lockstep=True`: pure jit with `NamedSharding`-placed inputs — GSPMD
+    partitions the vmapped solve along `cells`. The BCD `lax.while_loop`
+    condition becomes a cross-device all-reduce, so every shard iterates
+    until the globally slowest cell converges.
+  * `lockstep=False` (default on a multi-device mesh): the same vmapped
+    solver wrapped in `shard_map`, making the while_loop condition
+    *shard-local* — a shard stops as soon as its own cells converge. Cells
+    are solved by exactly the same select-masked program either way (the
+    vmapped while_loop freezes converged lanes), so per-cell results are
+    bit-identical between modes; only wall-clock differs. This is the
+    "shard_map only if the BCD while_loop forces it" carve-out: the
+    lockstep all-reduce is precisely what it buys back.
+
+CPU dev recipe: XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.accuracy import AccuracyModel, default_accuracy
+from repro.core.bcd import FleetResult, _fleet_cell_fn, _fleet_result
+from repro.core.types import Allocation, SystemParams, Weights
+
+Array = jnp.ndarray
+
+
+def region_mesh(n_devices: Optional[int] = None, devices=None) -> Mesh:
+    """1-D mesh over the local devices with axis name "cells" (the logical
+    axis `sharding.partition.region_rules` maps onto it)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), axis_names=("cells",))
+
+
+def cell_specs(tree):
+    """PartitionSpec pytree sharding every leaf's leading (cell) axis,
+    derived from `sharding.partition.region_rules` (cells -> mesh axis,
+    device and deeper axes shard-local)."""
+    from repro.sharding.partition import logical_to_spec, region_rules
+
+    rules = region_rules()
+    return jax.tree_util.tree_map(
+        lambda x: logical_to_spec(
+            ("cells",) + ("device",) * (jnp.ndim(x) - 1), rules), tree)
+
+
+def place_cells(tree, mesh: Mesh):
+    """device_put every leaf with its cell axis sharded over `mesh`."""
+    def put(x):
+        x = jnp.asarray(x)
+        spec = P("cells", *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(put, tree)
+
+
+def pad_cells(tree, c_pad: int):
+    """Pad every leaf's leading (cell) axis to `c_pad` by replicating the
+    last cell — mesh shards must divide the cell count. Replicated cells
+    cost duplicate work on the last shard only; callers slice them off."""
+    def pad(x):
+        x = jnp.asarray(x)
+        c = x.shape[0]
+        if c == c_pad:
+            return x
+        reps = jnp.broadcast_to(x[-1:], (c_pad - c,) + x.shape[1:])
+        return jnp.concatenate([x, reps], axis=0)
+    return jax.tree_util.tree_map(pad, tree)
+
+
+@dataclasses.dataclass
+class RegionResult:
+    """A sharded fleet solve plus per-shard convergence stats.
+
+    `stats` is gathered host-side lazily, ONCE, on first access (one
+    device->host transfer of a packed (4,) array): the serving hot path —
+    which only slices allocations back out — never pays the blocking
+    sync, while monitoring callers still get the summary for free."""
+    fleet: FleetResult
+    _stats_packed: Array     # (4,) device array, see _pack_stats
+    _n_cells: int
+    _mesh_devices: int
+    _stats_cache: Optional[dict] = dataclasses.field(default=None,
+                                                     repr=False)
+
+    @property
+    def stats(self) -> dict:
+        if self._stats_cache is None:
+            vals = np.asarray(self._stats_packed)
+            self._stats_cache = dict(
+                cells=self._n_cells, mesh_devices=self._mesh_devices,
+                converged_frac=float(vals[0]), iters_max=int(vals[1]),
+                iters_mean=float(vals[2]), objective_mean=float(vals[3]))
+        return self._stats_cache
+
+    # convenience passthroughs so RegionResult reads like a FleetResult
+    @property
+    def allocation(self) -> Allocation:
+        return self.fleet.allocation
+
+    @property
+    def objective(self) -> Array:
+        return self.fleet.objective
+
+    @property
+    def iters(self) -> Array:
+        return self.fleet.iters
+
+    @property
+    def converged(self) -> Array:
+        return self.fleet.converged
+
+
+@partial(jax.jit, static_argnames=("acc", "max_iters", "sp1_method",
+                                   "sp2_method", "sp2_iters", "mesh",
+                                   "lockstep", "with_init"))
+def _region_solve_impl(sys_batch, warr, init, tol, acc: AccuracyModel,
+                       max_iters: int, sp1_method: str, sp2_method: str,
+                       sp2_iters: int, mesh: Mesh, lockstep: bool,
+                       with_init: bool):
+    fn = _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
+                        sp2_iters, with_init)
+    vf = jax.vmap(fn)
+    args = (sys_batch, init) if with_init else (sys_batch,)
+    if lockstep or mesh.devices.size == 1:
+        return vf(*args)
+    in_specs = tuple(cell_specs(a) for a in args)
+    return shard_map(vf, mesh=mesh, in_specs=in_specs,
+                     out_specs=P("cells"), check_rep=False)(*args)
+
+
+def _pack_stats(fleet: FleetResult) -> Array:
+    """Per-shard convergence stats packed into one (4,) device array; the
+    host transfer happens lazily in RegionResult.stats."""
+    dtype = jnp.asarray(fleet.objective).dtype
+    return jnp.stack([
+        jnp.mean(fleet.converged.astype(dtype)),
+        jnp.max(fleet.iters).astype(dtype),
+        jnp.mean(fleet.iters.astype(dtype)),
+        jnp.nanmean(fleet.objective),
+    ])
+
+
+def _slice_fleet(fleet: FleetResult, n_cells: int) -> FleetResult:
+    if int(fleet.iters.shape[0]) == n_cells:
+        return fleet
+    cut = lambda x: x[:n_cells]
+    return FleetResult(
+        allocation=jax.tree_util.tree_map(cut, fleet.allocation),
+        objective=cut(fleet.objective), iters=cut(fleet.iters),
+        converged=cut(fleet.converged), history=cut(fleet.history))
+
+
+def allocate_region(sys_batch: SystemParams, w: Weights,
+                    acc: Optional[AccuracyModel] = None,
+                    mesh: Optional[Mesh] = None,
+                    max_iters: int = 20, tol: float = 1e-6,
+                    init: Optional[Allocation] = None,
+                    sp2_iters: int = 30, sp2_method: str = "direct",
+                    sp1_method: str = "sweep",
+                    lockstep: bool = False) -> RegionResult:
+    """`allocate_fleet` with the cell axis sharded over a device mesh.
+
+    The stacked-cell pytree is placed with `NamedSharding` over `cells`
+    (padding the cell count up to a mesh multiple by replicating the last
+    cell; replicas are sliced off the result). Per-cell outputs are
+    bit-identical to single-device `allocate_fleet` — sharding moves work,
+    not math. `stats` carries the per-shard convergence summary, gathered
+    host-side once, lazily, on first access (the serving hot path never
+    pays the sync).
+    """
+    mesh = mesh if mesh is not None else region_mesh()
+    acc = acc if acc is not None else default_accuracy()
+    w = w.normalized()
+    C = int(jnp.asarray(sys_batch.gain).shape[0])
+    D = int(mesh.devices.size)
+    Cp = -(-C // D) * D
+    sysb = place_cells(pad_cells(sys_batch, Cp), mesh)
+    initb = None if init is None else place_cells(pad_cells(init, Cp), mesh)
+    dtype = jnp.asarray(sysb.gain).dtype
+    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
+    out = _region_solve_impl(sysb, warr, initb, jnp.asarray(tol, dtype), acc,
+                             max_iters, sp1_method, sp2_method, sp2_iters,
+                             mesh, lockstep, init is not None)
+    fleet = _slice_fleet(_fleet_result(out, max_iters, dtype), C)
+    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
+                        _n_cells=C, _mesh_devices=int(mesh.devices.size))
+
+
+def run_rounds_region(key: jax.Array, sys_batch: SystemParams, w: Weights,
+                      cfg, acc: Optional[AccuracyModel] = None,
+                      init: Optional[Allocation] = None,
+                      mesh: Optional[Mesh] = None,
+                      lockstep: bool = False):
+    """`dynamics.run_rounds_fleet` with the cell axis sharded over a mesh.
+
+    Per-cell key splits match `run_rounds_fleet` (cell c consumes split c of
+    `key`; replicated pad cells reuse the last real cell's key and are
+    sliced off), so results agree with the single-device engine.
+    """
+    from repro.dynamics.config import RoundsResult
+    from repro.dynamics.engine import (_check_simulation_init,
+                                       _init_carry_state, _result)
+
+    mesh = mesh if mesh is not None else region_mesh()
+    acc = acc if acc is not None else default_accuracy()
+    w = w.normalized()
+    _check_simulation_init(cfg, init)
+    C = int(jnp.asarray(sys_batch.gain).shape[0])
+    D = int(mesh.devices.size)
+    Cp = -(-C // D) * D
+    dtype = jnp.asarray(sys_batch.gain).dtype
+    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
+    keys = pad_cells(jax.random.split(key, C), Cp)
+    sysb = place_cells(pad_cells(sys_batch, Cp), mesh)
+    keysb = place_cells(keys, mesh)
+    init_state = None if init is None else jax.vmap(_init_carry_state)(
+        sys_batch, init)
+    initb = None if init_state is None else place_cells(
+        pad_cells(init_state, Cp), mesh)
+    out = _region_rounds_impl(sysb, warr, keysb, initb, acc, cfg, mesh,
+                              lockstep, init_state is not None)
+    res = _result(out)
+    cut = lambda x: x[:C]
+    return RoundsResult(
+        allocation=jax.tree_util.tree_map(cut, res.allocation),
+        ledger=cut(res.ledger), staleness=cut(res.staleness),
+        gains=cut(res.gains), resolutions=cut(res.resolutions),
+        columns=res.columns)
+
+
+@partial(jax.jit, static_argnames=("acc", "cfg", "mesh", "lockstep",
+                                   "with_init"))
+def _region_rounds_impl(sys_batch, warr, keys, init_state, acc, cfg,
+                        mesh: Mesh, lockstep: bool, with_init: bool):
+    from repro.dynamics.engine import (_cell_engine, _init_carry_state,
+                                       initial_allocation)
+
+    def one(sysc, kc, *st):
+        st0 = st[0] if with_init else _init_carry_state(
+            sysc, initial_allocation(sysc))
+        return _cell_engine(sysc, warr, acc, kc, st0, cfg)
+
+    vf = jax.vmap(one)
+    args = (sys_batch, keys) + ((init_state,) if with_init else ())
+    if lockstep or mesh.devices.size == 1:
+        return vf(*args)
+    in_specs = tuple(cell_specs(a) for a in args)
+    return shard_map(vf, mesh=mesh, in_specs=in_specs,
+                     out_specs=P("cells"), check_rep=False)(*args)

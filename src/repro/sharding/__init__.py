@@ -1,3 +1,4 @@
 from .partition import (PARAM_AXIS_PATTERNS, active_axis_sizes, active_rules, axes_for_path,
                         fsdp_tp_rules, logical_to_spec, param_logical_axes,
-                        param_pspecs, param_shardings, shape_aware_spec, shard, use_rules)
+                        param_pspecs, param_shardings, region_rules,
+                        shape_aware_spec, shard, use_rules)

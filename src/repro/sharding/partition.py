@@ -57,6 +57,21 @@ def fsdp_tp_rules(multi_pod: bool, expert_parallel: bool = True,
     return rules
 
 
+def region_rules() -> Rules:
+    """Allocator-side rules for the region service (`repro.region`): a
+    stacked fleet's leading cell axis shards over the 1-D "cells" mesh
+    (`region.region_mesh`); the per-device axis — and everything below it —
+    stays local to a shard (cells are independent programs, so sharding
+    inside a cell would only buy all-reduces). The BCD while_loop makes
+    GSPMD lockstep across shards; `region.allocate_region` therefore runs
+    the vmapped solver under shard_map with these same specs."""
+    return {
+        "cells": "cells",     # stacked base-station cells -> mesh axis
+        "device": None,       # per-MAR-device axis: shard-local
+        "rounds": None,       # dynamics ledgers: time stays local
+    }
+
+
 _ACTIVE: threading.local = threading.local()
 
 

@@ -1,0 +1,229 @@
+"""Padding/masking invariants of the region batching layer (region.batch).
+
+The service pads every cell pool to a power-of-two bucket with masked
+devices; the whole design rests on the claim that padding is *invisible* to
+the real devices. Three layers of checks:
+
+  * bit-identity: with the default (direct) SP2 engine, the active prefix
+    of a padded solve — per-device B/p/f/s AND the iteration trajectory —
+    is bit-identical to the unpadded solve, across sweep/bisect SP1 and
+    f32/f64. (The reported ledger *scalars* may differ by ~1 ulp: XLA's
+    reduce association changes with the padded shape, so sums of the same
+    active values plus zero lanes can round differently. They are checked
+    to ulp-scale tolerance instead.)
+  * KKT/feasibility on the active prefix: budget, boxes, menu membership,
+    and SP1 dual feasibility Sigma lambda = w2 Rg at the returned deadline.
+  * neutrality of the pad lanes themselves: B = 0 exactly, zero energy.
+
+Deterministic cases run everywhere; the hypothesis sweep degrades to a
+skip via tests/_hypothesis_stub.py when hypothesis is absent.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import Weights, allocate, feasible, make_system
+from repro.core.accuracy import default_accuracy
+from repro.core.energy import e_cmp, e_trans
+from repro.core.sp1 import _coeffs, _lambda_of_T, _sp1_bounds
+from repro.region.batch import bucket_size, pad_allocation, pad_system
+
+_FIELDS = ("bandwidth", "power", "freq", "resolution")
+
+
+def _cast(sysp, dtype):
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(x, dtype), sysp)
+
+
+def _prefix_bit_identical(res, res_pad, n):
+    for f in _FIELDS:
+        a = np.asarray(getattr(res.allocation, f))
+        b = np.asarray(getattr(res_pad.allocation, f))[:n]
+        np.testing.assert_array_equal(a, b, err_msg=f"active prefix of {f}")
+    assert res.iters == res_pad.iters
+    assert res.converged == res_pad.converged
+
+
+def _scalars_ulp_close(res, res_pad, dtype):
+    # reduce-association tolerance: ~a few ulps of the solve dtype
+    rel = 64 * float(jnp.finfo(dtype).eps)
+    assert res_pad.objective == pytest.approx(res.objective, rel=rel)
+
+
+def _pad_lanes_neutral(sysp_pad, res_pad, n):
+    B = np.asarray(res_pad.allocation.bandwidth)[n:]
+    np.testing.assert_array_equal(B, np.zeros_like(B))
+    e = np.asarray(
+        e_trans(sysp_pad, res_pad.allocation.bandwidth,
+                res_pad.allocation.power)
+        + e_cmp(sysp_pad, res_pad.allocation.freq,
+                res_pad.allocation.resolution))[n:]
+    np.testing.assert_array_equal(e, np.zeros_like(e))
+
+
+def _check_prefix_kkt(sysp, w, res_pad, n, lam_tol=1e-3):
+    """Feasibility + SP1 dual feasibility of the active prefix, evaluated
+    on the UNPADDED system (the prefix is what the cell actually gets)."""
+    alloc = jax.tree_util.tree_map(
+        lambda x: x[:n] if jnp.ndim(x) else x, res_pad.allocation)
+    assert feasible(sysp, alloc)
+    w = w.normalized()
+    acc = default_accuracy()
+    from repro.core.energy import rate
+
+    tt = sysp.bits / jnp.maximum(
+        rate(sysp, alloc.bandwidth, alloc.power), 1e-12)
+    _, q = _coeffs(sysp, w)
+    f = np.asarray(alloc.freq)
+    s_hat = np.asarray(res_pad.allocation.s_relaxed)[:n]
+    mk_hat = np.asarray(q) * s_hat ** 2 / np.maximum(f, 1e-9) + np.asarray(tt)
+    lam_hi, target, T_lo, _ = _sp1_bounds(sysp, w, q, tt)
+    lam = _lambda_of_T(sysp, w, acc, jnp.asarray(mk_hat.max()), tt,
+                       float(lam_hi))
+    total, target = float(jnp.sum(lam)), float(target)
+    if mk_hat.max() <= float(T_lo) * (1 + 1e-9):
+        assert total <= target * (1 + lam_tol)
+    else:
+        assert total == pytest.approx(target, rel=lam_tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+@pytest.mark.parametrize("sp1_method", ["sweep", "bisect"])
+def test_padding_bit_identical_active_prefix(dtype, sp1_method):
+    n, n_pad = 7, 16
+    sysp = _cast(make_system(jax.random.PRNGKey(3), n_devices=n), dtype)
+    w = Weights(0.5, 0.5, 5.0)
+    res = allocate(sysp, w, max_iters=6, sp1_method=sp1_method)
+    spad = pad_system(sysp, n_pad)
+    res_pad = allocate(spad, w, max_iters=6, sp1_method=sp1_method)
+    _prefix_bit_identical(res, res_pad, n)
+    _scalars_ulp_close(res, res_pad, dtype)
+    _pad_lanes_neutral(spad, res_pad, n)
+    _check_prefix_kkt(sysp, w, res_pad, n)
+
+
+def test_pad_to_same_size_attaches_mask_only():
+    """n_pad == N: the solve must be untouched, the mask all-True."""
+    n = 6
+    sysp = make_system(jax.random.PRNGKey(5), n_devices=n)
+    spad = pad_system(sysp, n)
+    assert spad.active is not None and bool(jnp.all(spad.active))
+    w = Weights(0.5, 0.5, 1.0)
+    res = allocate(sysp, w, max_iters=5)
+    res_pad = allocate(spad, w, max_iters=5)
+    _prefix_bit_identical(res, res_pad, n)
+
+
+@pytest.mark.parametrize("sp2_method", ["jong"])
+def test_padding_jong_engine_close(sp2_method):
+    """The paper-literal Algorithm 1 engine is not bit-stable under padding
+    (its damped dual trajectory feels the reduce association through the
+    backtracking norms) but must stay finite and land at the same point."""
+    n = 7
+    sysp = make_system(jax.random.PRNGKey(3), n_devices=n)
+    w = Weights(0.5, 0.5, 5.0)
+    res = allocate(sysp, w, max_iters=6, sp2_method=sp2_method)
+    res_pad = allocate(pad_system(sysp, 12), w, max_iters=6,
+                       sp2_method=sp2_method)
+    np.testing.assert_allclose(
+        np.asarray(res_pad.allocation.bandwidth)[:n],
+        np.asarray(res.allocation.bandwidth), rtol=1e-4)
+    assert res_pad.objective == pytest.approx(res.objective, rel=1e-6)
+
+
+def test_warm_start_padding_parity():
+    """pad_allocation fills pad lanes at the masked fixed point, so a padded
+    warm re-solve matches the unpadded warm re-solve bit for bit."""
+    n, n_pad = 12, 16
+    sysp = make_system(jax.random.PRNGKey(40), n_devices=n)
+    w = Weights(0.5, 0.5, 1.0)
+    base = allocate(sysp, w, max_iters=40, tol=1e-8)
+    assert base.converged
+    bump = 1.0 + 0.02 * jnp.sin(jnp.arange(float(n)))
+    sys2 = sysp.replace(gain=sysp.gain * bump)
+    warm = allocate(sys2, w, max_iters=40, tol=1e-8, init=base.allocation)
+    spad = pad_system(sys2, n_pad)
+    init_pad = pad_allocation(base.allocation, n_pad, spad)
+    warm_pad = allocate(spad, w, max_iters=40, tol=1e-8, init=init_pad)
+    _prefix_bit_identical(warm, warm_pad, n)
+    assert warm_pad.iters <= 3   # the service warm-hit acceptance bound
+
+
+def test_keep_history_false_skips_ledger_materialization():
+    """allocate(keep_history=False): no history rows, same objective (the
+    service hot path skips the device->host ledger copy)."""
+    sysp = make_system(jax.random.PRNGKey(2), n_devices=6)
+    w = Weights(0.5, 0.5, 1.0)
+    full = allocate(sysp, w, max_iters=6)
+    lean = allocate(sysp, w, max_iters=6, keep_history=False)
+    assert lean.history == []
+    assert lean.objective == full.objective
+    assert lean.iters == full.iters and lean.converged == full.converged
+    # max_iters=0 stays nan, not an IndexError
+    empty = allocate(sysp, w, max_iters=0, keep_history=False)
+    assert empty.history == [] and np.isnan(empty.objective)
+
+
+def test_bucket_size_policy():
+    assert bucket_size(1, min_bucket=16) == 16
+    assert bucket_size(16, min_bucket=16) == 16
+    assert bucket_size(17, min_bucket=16) == 32
+    assert bucket_size(50) == 64
+    assert bucket_size(65) == 128
+    assert bucket_size(2048) == 2048
+    with pytest.raises(ValueError):
+        bucket_size(0)
+    # a 1..1024 device-count trace needs at most 5 compiled shapes
+    assert len({bucket_size(n) for n in range(1, 1025)}) == 5
+
+
+def test_pad_system_validates():
+    sysp = make_system(jax.random.PRNGKey(0), n_devices=5)
+    with pytest.raises(ValueError):
+        pad_system(sysp, 4)
+    spad = pad_system(sysp, 9)
+    assert spad.n == 9
+    assert np.asarray(spad.active).tolist() == [True] * 5 + [False] * 4
+    np.testing.assert_array_equal(np.asarray(spad.bits)[5:], 0.0)
+    # re-padding a padded system keeps the original mask prefix
+    spad2 = pad_system(spad, 12)
+    assert np.asarray(spad2.active).tolist() == [True] * 5 + [False] * 7
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep (skips when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 10), pad=st.integers(1, 12),
+       w1=st.floats(0.05, 0.95), rho=st.floats(0.0, 30.0),
+       seed=st.integers(0, 15), sp1=st.sampled_from(["sweep", "bisect"]))
+def test_padding_property(n, pad, w1, rho, seed, sp1):
+    sysp = make_system(jax.random.PRNGKey(seed), n_devices=n)
+    w = Weights(w1, 1.0 - w1, rho)
+    res = allocate(sysp, w, max_iters=6, sp1_method=sp1)
+    res_pad = allocate(pad_system(sysp, n + pad), w, max_iters=6,
+                       sp1_method=sp1)
+    _prefix_bit_identical(res, res_pad, n)
+    _scalars_ulp_close(res, res_pad, jnp.float64)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(3, 8), pad=st.integers(1, 8), seed=st.integers(0, 7))
+def test_padding_property_f32(n, pad, seed):
+    sysp = _cast(make_system(jax.random.PRNGKey(seed), n_devices=n),
+                 jnp.float32)
+    w = Weights(0.5, 0.5, 5.0)
+    res = allocate(sysp, w, max_iters=6)
+    res_pad = allocate(pad_system(sysp, n + pad), w, max_iters=6)
+    _prefix_bit_identical(res, res_pad, n)
+    _scalars_ulp_close(res, res_pad, jnp.float32)

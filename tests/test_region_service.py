@@ -1,0 +1,117 @@
+"""Service layer: RegionAllocator request coalescing, bucketing, LRU warm
+starts. The acceptance trace itself (256 mixed-size requests, <= 4 compiled
+shapes, warm hits <= 3 BCD iterations) runs at example scale in
+examples/region_serve.py; here the same properties are checked at test
+scale."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Weights, allocate, make_system
+from repro.region import AllocationRequest, RegionAllocator, bucket_size
+
+W = Weights(0.5, 0.5, 1.0)
+
+
+def _req(cell_id, n, seed=None, drift=0.0):
+    sysp = make_system(jax.random.PRNGKey(seed if seed is not None
+                                          else 100 + cell_id), n_devices=n)
+    if drift:
+        sysp = sysp.replace(
+            gain=sysp.gain * (1.0 + drift * jnp.sin(jnp.arange(float(n)) + cell_id)))
+    return AllocationRequest(cell_id=cell_id, sys=sysp)
+
+
+def _allocator(**kw):
+    kw.setdefault("cells_per_batch", 4)
+    kw.setdefault("min_bucket", 8)
+    return RegionAllocator(W, **kw)
+
+
+def test_mixed_size_trace_bucketing_and_warm_cache():
+    """A mixed-size trace spanning pools of 5..60 devices compiles <= 4
+    batch shapes; drifted re-requests hit the warm cache and re-solve in
+    <= 3 BCD iterations."""
+    svc = _allocator()
+    sizes = [5, 7, 9, 14, 17, 25, 33, 50, 60, 12, 28, 6]
+    reqs = [_req(i, n) for i, n in enumerate(sizes)]
+    res = svc.solve(reqs)
+    assert set(res) == set(range(len(sizes)))
+    assert len(svc.compiled_shapes) <= 4
+    assert svc.stats["cache_hits"] == 0
+    assert all(r.converged and np.isfinite(r.objective)
+               for r in res.values())
+    assert all(not r.warm for r in res.values())
+    # each response is unpadded back to the request's pool size
+    for i, n in enumerate(sizes):
+        assert res[i].allocation.bandwidth.shape == (n,)
+        assert res[i].bucket == bucket_size(n, 8)
+
+    # drifted re-requests: warm hits, <= 3 iterations, no new shapes
+    shapes_before = set(svc.compiled_shapes)
+    reqs2 = [_req(i, n, drift=0.02) for i, n in enumerate(sizes)]
+    res2 = svc.solve(reqs2)
+    assert all(r.warm for r in res2.values())
+    assert max(r.iters for r in res2.values()) <= 3
+    assert svc.compiled_shapes == shapes_before
+    assert svc.stats["cache_hits"] == len(sizes)
+
+
+def test_service_matches_direct_allocate():
+    """A service response equals a direct `allocate` of the same cell (the
+    padding bit-identity transfers through the vmapped batch to ~float
+    precision)."""
+    svc = _allocator()
+    req = _req(0, 11)
+    res = svc.solve([req])[0]
+    direct = allocate(req.sys, W, max_iters=20, tol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.allocation.bandwidth),
+                               np.asarray(direct.allocation.bandwidth),
+                               rtol=1e-9)
+    assert res.objective == pytest.approx(direct.objective, rel=1e-9)
+    assert res.iters == direct.iters
+
+
+def test_submit_flush_stream():
+    svc = _allocator()
+    for i in range(3):
+        svc.submit(_req(i, 6))
+    res = svc.flush()
+    assert set(res) == {0, 1, 2}
+    assert svc.flush() == {}   # queue drained
+    assert svc.stats["requests"] == 3
+    assert svc.stats["batches"] == 1   # one bucket, one chunk
+
+
+def test_pool_resize_invalidates_cache_entry():
+    """Same cell_id with a different device count must not warm-start from
+    the stale (differently shaped) solution."""
+    svc = _allocator()
+    svc.solve([_req(7, 6)])
+    res = svc.solve([_req(7, 9)])[7]
+    assert not res.warm
+    assert res.allocation.bandwidth.shape == (9,)
+
+
+def test_lru_eviction():
+    svc = _allocator(cache_size=2)
+    svc.solve([_req(i, 6) for i in range(3)])   # one batch, 3 cells
+    assert len(svc._cache) == 2
+    # cell 0 was evicted (first in), cells 1-2 stay warm
+    res = svc.solve([_req(i, 6, drift=0.01) for i in range(3)])
+    assert not res[0].warm and res[1].warm and res[2].warm
+
+
+def test_chunking_over_cells_per_batch():
+    """More requests than cells_per_batch in one bucket split into chunks
+    of the SAME compiled shape."""
+    svc = _allocator(cells_per_batch=2)
+    res = svc.solve([_req(i, 6) for i in range(5)])
+    assert len(res) == 5
+    assert svc.stats["batches"] == 3          # ceil(5 / 2)
+    assert len(svc.compiled_shapes) == 1      # all (2, 8)
+    assert svc.stats["cells_padded"] == 1     # the last chunk padded 1 cell
