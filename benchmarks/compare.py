@@ -1,13 +1,19 @@
 """Diff a fresh benchmark --json artifact against a committed baseline.
 
     PYTHONPATH=src python -m benchmarks.compare FRESH.json BASELINE.json \
-        [--factor 2.0]
+        [--factor 2.0] [--strict]
 
 Rows are matched by name; a fresh row slower than `factor` x the baseline
 `us_per_call` emits a GitHub-Actions `::warning::` annotation (plain text on
 a terminal). Non-blocking by design: the exit code is always 0 — this is a
 perf-trajectory tripwire, not a gate (CI hosts differ from the recording
 host, so absolute walls drift; >2x on the same row is worth a look).
+
+`--strict` flips that: exit 1 when any row regresses beyond the factor (or
+the artifacts are unreadable). It exists for the bench re-record protocol —
+when BENCH_*.json is re-recorded on the SAME host (e.g. after the solve()
+unification, median-of-3), the new artifact must show no per-row regression
+beyond the tripwire against the committed one before replacing it.
 """
 from __future__ import annotations
 
@@ -21,19 +27,20 @@ def load_rows(path: str) -> dict:
     return {r["name"]: r for r in data.get("rows", [])}
 
 
-def compare(fresh_path: str, base_path: str, factor: float = 2.0) -> int:
+def compare(fresh_path: str, base_path: str, factor: float = 2.0,
+            strict: bool = False) -> int:
     try:
         fresh, base = load_rows(fresh_path), load_rows(base_path)
     except (OSError, ValueError, KeyError) as e:
         # stay non-blocking even when an artifact is missing or malformed
         # (e.g. the fresh bench step itself failed under continue-on-error)
         print(f"::warning::benchmarks.compare: cannot read artifacts: {e}")
-        return 0
+        return 1 if strict else 0
     common = sorted(set(fresh) & set(base))
     if not common:
         print(f"::warning::benchmarks.compare: no common rows between "
               f"{fresh_path} and {base_path}")
-        return 0
+        return 1 if strict else 0
     n_slow = 0
     for name in common:
         try:
@@ -53,28 +60,43 @@ def compare(fresh_path: str, base_path: str, factor: float = 2.0) -> int:
     only_base = sorted(set(base) - set(fresh))
     if only_base:
         print(f"baseline-only rows (not re-run): {', '.join(only_base)}")
+        if strict:
+            # a truncated fresh artifact (a bench step crashed mid-record)
+            # must not replace a fuller baseline just because the rows that
+            # DID record look fine
+            print(f"::warning::--strict: fresh artifact is missing "
+                  f"{len(only_base)} baseline row(s)")
+            n_slow += len(only_base)
     print(f"# compared {len(common)} rows, {n_slow} regressed "
-          f"beyond {factor:.1f}x")
-    return 0
+          f"beyond {factor:.1f}x or missing")
+    return 1 if (strict and n_slow) else 0
 
 
 def main() -> None:
     args = sys.argv[1:]
     factor = 2.0
+    strict = "--strict" in args
+    if strict:
+        args.remove("--strict")
     if "--factor" in args:
         i = args.index("--factor")
         try:
             factor = float(args[i + 1])
         except (IndexError, ValueError):
+            if strict:
+                # the gate must enforce the threshold the operator asked
+                # for — a silent 2.0 fallback would weaken it
+                sys.exit("benchmarks.compare: bad --factor value under "
+                         "--strict")
             print("::warning::benchmarks.compare: bad --factor value, "
                   "using 2.0")
         args = args[:i] + args[i + 2:]
     if len(args) != 2:
-        # still exit 0: this tool must never break a CI pipeline
+        # still exit 0 unless --strict: must never break the CI pipeline
         print("::warning::usage: python -m benchmarks.compare FRESH.json "
-              "BASELINE.json [--factor F]")
-        sys.exit(0)
-    sys.exit(compare(args[0], args[1], factor))
+              "BASELINE.json [--factor F] [--strict]")
+        sys.exit(1 if strict else 0)
+    sys.exit(compare(args[0], args[1], factor, strict))
 
 
 if __name__ == "__main__":

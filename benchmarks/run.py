@@ -20,9 +20,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Weights, allocate, allocate_fixed_deadline,
-                        allocate_fleet, make_fleet, make_system, total_energy,
-                        total_time)
+from repro import Problem, SolverSpec, Weights, make_fleet, make_system, solve
+from repro.core import total_energy, total_time
 from repro.core.baselines import comm_only, comp_only, min_pixel, rand_pixel, scheme1
 from repro.core.types import dbm_to_watt
 
@@ -53,7 +52,8 @@ def fig3_weight_sweep_power():
         for w1, w2 in [(0.9, 0.1), (0.5, 0.5), (0.1, 0.9)]:
             def run(key, w1=w1, w2=w2):
                 sysp = make_system(key, n_devices=N_DEV, p_max=dbm_to_watt(pmax_dbm))
-                res = allocate(sysp, Weights(w1, w2, 1.0), max_iters=6)
+                res = solve(Problem(system=sysp, weights=Weights(w1, w2, 1.0)),
+                            SolverSpec(max_iters=6))
                 return (float(total_energy(sysp, res.allocation)),
                         float(total_time(sysp, res.allocation)))
             t0 = time.time()
@@ -77,7 +77,8 @@ def fig4_weight_sweep_freq():
         for w1, w2 in [(0.9, 0.1), (0.5, 0.5), (0.1, 0.9)]:
             def run(key, w1=w1, w2=w2):
                 sysp = make_system(key, n_devices=N_DEV, f_max=fmax)
-                res = allocate(sysp, Weights(w1, w2, 10.0), max_iters=6)
+                res = solve(Problem(system=sysp, weights=Weights(w1, w2, 10.0)),
+                            SolverSpec(max_iters=6))
                 return (float(total_energy(sysp, res.allocation)),
                         float(total_time(sysp, res.allocation)))
             t0 = time.time()
@@ -100,7 +101,8 @@ def fig5_rho_sweep():
     for rho in [1.0, 10.0, 30.0, 50.0]:
         def run(key, rho=rho):
             sysp = make_system(key, n_devices=N_DEV)
-            res = allocate(sysp, Weights(0.5, 0.5, rho), max_iters=6)
+            res = solve(Problem(system=sysp, weights=Weights(0.5, 0.5, rho)),
+                        SolverSpec(max_iters=6))
             a = res.allocation
             return (float(total_energy(sysp, a)), float(total_time(sysp, a)),
                     float(jnp.mean(a.resolution)))
@@ -155,7 +157,8 @@ def fig8_joint_vs_single():
         sysp = make_system(key, n_devices=N_DEV, p_max=dbm_to_watt(10.0))
         w = Weights(0.99, 0.01, 1.0)
         t0 = time.time()
-        ours = allocate_fixed_deadline(sysp, w, T_total, max_iters=6)
+        ours = solve(Problem(system=sysp, weights=w, deadline=T_total),
+                     SolverSpec(max_iters=6))
         e_ours = float(total_energy(sysp, ours.allocation))
         a_comm = comm_only(sysp, w, T_total, jax.random.fold_in(key, 1))
         e_comm = float(total_energy(sysp, a_comm))
@@ -208,24 +211,36 @@ def table_allocator_scaling():
 
 def fleet_scale():
     """Fleet allocation: one vmap'd BCD solve across C cells x N devices —
-    the allocate_fleet acceptance row (>= 64 cells x 2048 devices).
+    the fleet acceptance row (>= 64 cells x 2048 devices), now through the
+    unified `solve()` dispatcher (median-of-3 protocol: one compile/warm
+    call, then the median of 3 timed solves — the recorded wall is the
+    steady-state dispatcher cost, so a solve()-layer regression shows up
+    directly against the BENCH_fleet.json baseline).
     max_iters=8 is calibrated to the fleet regime: the BCD rel-step contracts
     ~5x per iteration and hits the f32 convergence floor around iteration 6
     (the old max_iters=3 could not converge any cell except by luck)."""
+    import statistics
+
     C, N = 64, 2048
     key = jax.random.PRNGKey(31)
     fleet = make_fleet(key, n_cells=C, n_devices=N,
                        bandwidth_total=20e6 * N / 50)
-    w = Weights(0.5, 0.5, 1.0)
-    t0 = time.time()
-    res = allocate_fleet(fleet, w, max_iters=8)
+    problem = Problem(system=fleet, weights=Weights(0.5, 0.5, 1.0))
+    spec = SolverSpec(max_iters=8)
+    res = solve(problem, spec)   # compile / warm
     jax.block_until_ready(res.allocation.bandwidth)
-    t1 = time.time()
+    walls = []
+    for _ in range(3):
+        t0 = time.time()
+        jax.block_until_ready(solve(problem, spec).allocation.bandwidth)
+        walls.append(time.time() - t0)
+    wall = statistics.median(walls)
     conv = int(jnp.sum(res.converged))
-    _row(f"fleet.C{C}.N{N}", t0, t1,
+    t0 = time.time()
+    _row(f"fleet.C{C}.N{N}", t0, t0 + wall,
          f"devices={C * N};cells_converged={conv}/{C};"
          f"mean_obj={float(jnp.mean(res.objective)):.4g};"
-         f"wall_s={t1 - t0:.1f}")
+         f"wall_s={wall:.1f}")
 
 
 def region_scale():
@@ -239,7 +254,7 @@ def region_scale():
     one CPU host. Also reports the SP2-direct carried-bracket dual-search
     eval count (ledger `sp2_iters` column) vs the non-carried reference."""
     from repro.core.sp2 import direct_eval_counts
-    from repro.region import allocate_region, region_mesh
+    from repro.region import region_mesh
 
     import os
     import statistics
@@ -249,6 +264,7 @@ def region_scale():
     fleet = make_fleet(key, n_cells=C, n_devices=N,
                        bandwidth_total=20e6 * N / 50)
     w = Weights(0.5, 0.5, 1.0)
+    spec = SolverSpec(max_iters=8)
     ndev = jax.device_count()
     cores = os.cpu_count() or 1
 
@@ -261,18 +277,19 @@ def region_scale():
             walls.append(time.time() - t0)
         return statistics.median(walls)
 
-    res1 = allocate_fleet(fleet, w, max_iters=8)
+    res1 = solve(Problem(system=fleet, weights=w), spec)
     t_1dev = median_wall(lambda: jax.block_until_ready(
-        allocate_fleet(fleet, w, max_iters=8).allocation.bandwidth))
+        solve(Problem(system=fleet, weights=w),
+              spec).allocation.bandwidth))
     walls = {}
     for nd in sorted({min(4, ndev), ndev}):
         if nd <= 1:
             continue
         mesh = region_mesh(nd)
         walls[nd] = median_wall(lambda m=mesh: jax.block_until_ready(
-            allocate_region(fleet, w, max_iters=8,
-                            mesh=m).fleet.allocation.bandwidth))
-    reg = allocate_region(fleet, w, max_iters=8, mesh=region_mesh())
+            solve(Problem(system=fleet, weights=w, mesh=m),
+                  spec).fleet.allocation.bandwidth))
+    reg = solve(Problem(system=fleet, weights=w, mesh=region_mesh()), spec)
 
     # measured SP2 dual-search evals (sp2_iters ledger col) vs reference
     led = jnp.asarray(res1.history)                      # (C, it, cols)
@@ -304,7 +321,7 @@ def rounds_dynamics():
     reference is the SAME engine with warm_start=False, i.e. a cold
     `allocate_fleet` (paper init, fleet-row max_iters=8 calibration) every
     round. Both walls include one compile amortized over the 32 rounds."""
-    from repro.dynamics import RoundsConfig, run_rounds_fleet
+    from repro.dynamics import RoundsConfig
 
     R, C, N = 32, 64, 2048
     key = jax.random.PRNGKey(51)
@@ -314,7 +331,7 @@ def rounds_dynamics():
 
     # round-0 allocation the warm engine starts from (one cold fleet solve)
     t0 = time.time()
-    base = allocate_fleet(fleet, w, max_iters=8)
+    base = solve(Problem(system=fleet, weights=w), SolverSpec(max_iters=8))
     jax.block_until_ready(base.allocation.bandwidth)
     t_base = time.time() - t0
 
@@ -326,8 +343,9 @@ def rounds_dynamics():
         ("cold", RoundsConfig(bcd_iters=8, warm_start=False, **kw)),
     ]:
         t0 = time.time()
-        rr = run_rounds_fleet(jax.random.PRNGKey(52), fleet, w, cfg,
-                              init=base.allocation)
+        rr = solve(Problem(system=fleet, weights=w, rounds=cfg,
+                           key=jax.random.PRNGKey(52),
+                           init=base.allocation))
         jax.block_until_ready(rr.ledger)
         walls[tag] = time.time() - t0
         per_round_cells = jnp.mean(rr.col("bcd_converged"), axis=0)
@@ -406,24 +424,26 @@ def roofline_table():
 
 def ablations():
     """Component ablations of the allocator (beyond-paper analyses)."""
-    from repro.core import allocate_fixed_deadline
     from repro.core.accuracy import log_fit
     from repro.core.baselines import scheme1
 
     # (a) SP2 engine: exact direct vs paper's Algorithm 1 (damped)
     key = jax.random.PRNGKey(21)
     sysp = make_system(key, n_devices=N_DEV)
+    w = Weights(0.5, 0.5, 1.0)
     t0 = time.time()
-    r_dir = allocate(sysp, Weights(0.5, 0.5, 1.0), max_iters=6, sp2_method="direct")
-    r_jng = allocate(sysp, Weights(0.5, 0.5, 1.0), max_iters=6, sp2_method="jong")
+    r_dir = solve(Problem(system=sysp, weights=w),
+                  SolverSpec(max_iters=6, sp2_method="direct"))
+    r_jng = solve(Problem(system=sysp, weights=w),
+                  SolverSpec(max_iters=6, sp2_method="jong"))
     _row("ablation.sp2_engine", t0, time.time(),
          f"direct_E={r_dir.history[-1]['energy']:.4g}J;"
          f"jong_E={r_jng.history[-1]['energy']:.4g}J")
 
     # (b) deadline split optimization on/off (the BCD deadlock fix)
     t0 = time.time()
-    with_split = allocate_fixed_deadline(sysp, Weights(0.99, 0.01, 0.0), 150.0,
-                                         max_iters=6)
+    with_split = solve(Problem(system=sysp, weights=Weights(0.99, 0.01, 0.0),
+                               deadline=150.0), SolverSpec(max_iters=6))
     s1 = scheme1(sysp, Weights(0.99, 0.01, 0.0), 150.0)
     _row("ablation.deadline_split", t0, time.time(),
          f"with_split={float(total_energy(sysp, with_split.allocation)):.4g}J;"
@@ -431,8 +451,10 @@ def ablations():
 
     # (c) accuracy model: linear (paper) vs concave log fit
     t0 = time.time()
-    r_lin = allocate(sysp, Weights(0.5, 0.5, 40.0), max_iters=6)
-    r_log = allocate(sysp, Weights(0.5, 0.5, 40.0), max_iters=6, acc=log_fit())
+    r_lin = solve(Problem(system=sysp, weights=Weights(0.5, 0.5, 40.0)),
+                  SolverSpec(max_iters=6))
+    r_log = solve(Problem(system=sysp, weights=Weights(0.5, 0.5, 40.0),
+                          acc=log_fit()), SolverSpec(max_iters=6))
     _row("ablation.accuracy_model", t0, time.time(),
          f"linear_mean_s={float(jnp.mean(r_lin.allocation.resolution)):.0f}px;"
          f"logfit_mean_s={float(jnp.mean(r_log.allocation.resolution)):.0f}px")

@@ -12,50 +12,66 @@
    Pallas waterfill kernel doing the batched dual sweep.
 
     PYTHONPATH=src python examples/allocate_fleet.py
+
+REPRO_SMOKE=1 shrinks every section to CI-smoke size (~seconds).
 """
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Weights, allocate_fleet, make_fleet, make_system
+from repro import Problem, SolverSpec, Weights, make_fleet, make_system, solve
 from repro.core.energy import t_cmp
 from repro.core.sp2 import r_min, solve_sp2_direct
 from repro.core.types import dbm_to_watt
 from repro.kernels import ops
 
-# --- 1. fleet BCD: 64 cells x 2048 devices in one vmap'd call -------------
-C, N_CELL = 64, 2048
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
+
+# --- 1. fleet BCD: 64 cells x 2048 devices in one solve() call ------------
+C, N_CELL = (4, 64) if SMOKE else (64, 2048)
 key = jax.random.PRNGKey(0)
 fleet = make_fleet(key, n_cells=C, n_devices=N_CELL,
                    bandwidth_total=20e6 * N_CELL / 50)
 
 t0 = time.time()
-res = allocate_fleet(fleet, Weights(0.5, 0.5, 1.0), max_iters=8)
+# tol=1e-4: comfortably above the f32 rel-step floor (tighter requests
+# are floored there; solve() warns once if you try)
+res = solve(Problem(system=fleet, weights=Weights(0.5, 0.5, 1.0)),
+            SolverSpec(max_iters=8, tol=1e-4))
 jax.block_until_ready(res.allocation.bandwidth)
 print(f"allocate_fleet: {C} cells x {N_CELL} devices "
       f"({C * N_CELL} AR clients) in {time.time() - t0:.1f}s — "
       f"{int(jnp.sum(res.converged))}/{C} cells converged, "
       f"mean objective {float(jnp.mean(res.objective)):.4g}")
 
-# --- 2. heterogeneous fleet: macro / micro / pico cell classes ------------
-CH, N_H = 12, 256
-classes = [(80e6, 12.0), (40e6, 8.0), (10e6, 4.0)]   # (B total, pmax dBm)
+# --- 2. heterogeneous fleet with PER-CELL weights -------------------------
+# macro / micro / pico cell classes, each weighing energy vs latency
+# differently — weights are a traced (C, 3) operand of the one compiled
+# solve, so the mixed-demand fleet costs zero extra compiles
+CH, N_H = (6, 64) if SMOKE else (12, 256)
+classes = [(80e6, 12.0, Weights(0.2, 0.8, 1.0)),    # macro: latency-heavy
+           (40e6, 8.0, Weights(0.5, 0.5, 10.0)),    # micro: balanced
+           (10e6, 4.0, Weights(0.9, 0.1, 1.0))]     # pico: energy-heavy
 bw = [classes[c % 3][0] for c in range(CH)]
 pmax = [dbm_to_watt(classes[c % 3][1]) for c in range(CH)]
+w_cells = [classes[c % 3][2] for c in range(CH)]
 het = make_fleet(jax.random.fold_in(key, 1), n_cells=CH, n_devices=N_H,
                  bandwidth_total=bw, p_max=pmax)
 t0 = time.time()
-res_h = allocate_fleet(het, Weights(0.5, 0.5, 1.0), max_iters=8)
+res_h = solve(Problem(system=het, weights=w_cells),
+              SolverSpec(max_iters=8, tol=1e-4))
 jax.block_until_ready(res_h.allocation.bandwidth)
 obj = jnp.asarray(res_h.objective)
 print(f"heterogeneous fleet: {CH} mixed cells (B {min(bw)/1e6:.0f}-"
-      f"{max(bw)/1e6:.0f} MHz) in {time.time() - t0:.1f}s — "
-      f"{int(jnp.sum(res_h.converged))}/{CH} converged; per-class mean obj: "
-      + ", ".join(f"{float(jnp.mean(obj[i::3])):.4g}" for i in range(3)))
+      f"{max(bw)/1e6:.0f} MHz, per-cell weights) in {time.time() - t0:.1f}s "
+      f"— {int(jnp.sum(res_h.converged))}/{CH} converged; per-class mean "
+      "obj: " + ", ".join(f"{float(jnp.mean(obj[i::3])):.4g}"
+                          for i in range(3)))
 
 # --- 3. single giant region through the closed-form SP2 solver ------------
-N = 1 << 17
+N = 1 << 12 if SMOKE else 1 << 17
 system = make_system(key, n_devices=N, bandwidth_total=20e6 * (N / 50))
 
 f = jnp.full((N,), 1e9)

@@ -9,8 +9,8 @@ s_n — budget ∝ s^2) and the wireless (p, B) schedule; FedAvg merges rounds.
 import jax
 import jax.numpy as jnp
 
+from repro import Problem, SolverSpec, Weights, solve
 from repro.configs import ARCHS
-from repro.core import Weights, allocate
 from repro.core.costmodel import arch_system
 from repro.core.energy import e_cmp, e_trans, round_time
 from repro.data import SyntheticLM
@@ -27,7 +27,8 @@ key = jax.random.PRNGKey(0)
 
 # 1) allocate: c_n from the architecture's cost model (DESIGN.md §2)
 system = arch_system(key, "internlm2-20b", n_devices=N_CLIENTS)
-result = allocate(system, Weights(0.5, 0.5, 3e4), max_iters=4)
+result = solve(Problem(system=system, weights=Weights(0.5, 0.5, 3e4)),
+               SolverSpec(max_iters=4))
 alloc = result.allocation
 res_grid = list(system.resolutions)
 budgets = [32 * (1 + res_grid.index(float(s))) for s in alloc.resolution]

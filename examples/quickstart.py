@@ -1,17 +1,21 @@
-"""Quickstart: allocate resources for an FL-MAR fleet and inspect the result.
+"""Quickstart: allocate resources for an FL-MAR cell through the unified
+solver API and inspect the result.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import (Weights, allocate, default_accuracy, feasible,
-                        make_system, summarize)
+from repro import Problem, SolverSpec, Weights, make_system, solve
+from repro.core import default_accuracy, feasible, summarize
 
 key = jax.random.PRNGKey(0)
 system = make_system(key, n_devices=20)          # paper §VII-A parameters
 weights = Weights(w1=0.5, w2=0.5, rho=30.0)      # energy/time/accuracy trade
 
-result = allocate(system, weights)               # Algorithm 2 (BCD)
+# one entry point: Problem says WHAT (system + weights), SolverSpec says HOW.
+# tol=1e-4 sits above the f32 rel-step floor (~7.6e-6) — a tighter tol on an
+# f32 system would be floored there (and solve() says so, once)
+result = solve(Problem(system=system, weights=weights), SolverSpec(tol=1e-4))
 alloc = result.allocation
 
 print(f"converged={result.converged} in {result.iters} BCD iterations")

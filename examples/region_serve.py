@@ -9,40 +9,52 @@ drift and their device pools churn. The service:
   * coalesces concurrent requests into fixed-shape cell batches, sharded
     over the local device mesh (`allocate_region`, shard-local early exit);
   * warm-starts re-requests from an LRU cache of previous solutions —
-    a drifted cell re-solves in ~2 BCD iterations instead of a cold ~8+.
+    a drifted cell re-solves in ~2 BCD iterations instead of a cold ~8+;
+  * accepts PER-REQUEST weights: every cell weighs energy/latency/accuracy
+    differently (the multi-cell mixed-demand deployments of the
+    arXiv:2212.08324 / 2301.12085 follow-ups). Weights are a traced (C, 3)
+    operand of the compiled solve, so the mixed-weights trace compiles
+    exactly as many shapes as the fixed-weights one.
 
-Acceptance trace: 256 mixed-size requests -> <= 4 distinct compiled batch
-shapes, warm-cache hits re-solving in <= 3 BCD iterations.
+Acceptance trace: 256 mixed-size, mixed-WEIGHTS requests -> <= 4 distinct
+compiled batch shapes, warm-cache hits re-solving in <= 3 BCD iterations.
 
     # multi-device mesh on one CPU host:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/region_serve.py
+
+REPRO_SMOKE=1 shrinks the trace for CI.
 """
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Weights, make_system
+from repro import SolverSpec, Weights, make_system
 from repro.region import AllocationRequest, RegionAllocator, region_mesh
 
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
 RATE = 8.0          # mean requests per service tick (Poisson)
 TICKS = 40          # trace length: ~RATE * TICKS total requests
-N_CELLS = 48        # distinct cells in the region
-TARGET_REQUESTS = 256
+N_CELLS = 12 if SMOKE else 48    # distinct cells in the region
+TARGET_REQUESTS = 24 if SMOKE else 256
 DRIFT = 0.01        # per-re-request channel drift (fractional)
 
 rng = np.random.default_rng(7)
 key = jax.random.PRNGKey(0)
 
-# the region's cell population: mixed pool sizes, 9..500 devices
+# the region's cell population: mixed pool sizes, 9..500 devices, and a
+# mixed demand profile — every cell carries its OWN objective weights
 pool_sizes = rng.choice([9, 14, 23, 40, 65, 90, 150, 260, 410, 500],
                         size=N_CELLS)
-cells = {}
+cells, cell_w = {}, {}
 for cid in range(N_CELLS):
     cells[cid] = make_system(jax.random.fold_in(key, cid),
                              n_devices=int(pool_sizes[cid]))
+    w1 = float(rng.uniform(0.1, 0.9))            # energy vs latency mix
+    cell_w[cid] = Weights(w1, 1.0 - w1, float(rng.uniform(1.0, 30.0)))
 
 mesh = region_mesh()
 # tol=1e-4: the serving hot path re-solves against percent-scale channel
@@ -51,9 +63,10 @@ mesh = region_mesh()
 # extra BCD iterations polishing digits the next drift immediately erases.
 svc = RegionAllocator(Weights(0.5, 0.5, 1.0),
                       mesh=mesh if mesh.devices.size > 1 else None,
-                      cells_per_batch=8, min_bucket=64, tol=1e-4)
+                      cells_per_batch=8, min_bucket=64,
+                      spec=SolverSpec(tol=1e-4))
 print(f"region: {N_CELLS} cells, pools {pool_sizes.min()}-{pool_sizes.max()} "
-      f"devices, mesh of {mesh.devices.size} device(s)")
+      f"devices, per-cell weights, mesh of {mesh.devices.size} device(s)")
 
 served = 0
 warm_iters, cold_iters = [], []
@@ -70,7 +83,8 @@ for tick in range(TICKS):
             np.asarray(sys_c.gain).dtype)
         cells[cid] = sys_c.replace(gain=sys_c.gain * jnp.abs(
             jnp.asarray(drift)))
-        svc.submit(AllocationRequest(cell_id=cid, sys=cells[cid]))
+        svc.submit(AllocationRequest(cell_id=cid, sys=cells[cid],
+                                     w=cell_w[cid]))
     res = svc.flush()
     served += len(res)
     for r in res.values():

@@ -12,21 +12,25 @@ iterations — against the sampled gains.
 
 Prints the realized per-round ledger of three policies on the same channel
 trace: static allocate-once, warm per-round re-allocation, and warm
-re-allocation with stragglers + async staleness.
+re-allocation with stragglers + async staleness. REPRO_SMOKE=1 shrinks the
+trace for CI.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import Weights, allocate, make_system
-from repro.dynamics import RoundsConfig, run_rounds
+from repro import Problem, SolverSpec, Weights, make_system, solve
+from repro.dynamics import RoundsConfig
 
-N, R = 24, 16
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"
+N, R = (8, 4) if SMOKE else (24, 16)
 key = jax.random.PRNGKey(0)
 sysp = make_system(key, n_devices=N)
 w = Weights(0.5, 0.5, 1.0)
 
 # one cold solve against E[G_n]: the static policy, and the warm init
-base = allocate(sysp, w, max_iters=12)
+base = solve(Problem(system=sysp, weights=w), SolverSpec(max_iters=12))
 print(f"cold solve: {base.iters} BCD iters, objective {base.objective:.4g}")
 
 fading = dict(rounds=R, channel_mode="markov", drift_rho=0.9, bcd_tol=1e-3)
@@ -44,7 +48,10 @@ policies = {
 print(f"\n{'policy':>15} {'energy(J)':>10} {'time(s)':>9} {'mean obj':>10} "
       f"{'arrived':>8} {'conv':>5}")
 for name, cfg in policies.items():
-    rr = run_rounds(jax.random.PRNGKey(1), sysp, w, cfg, init=base.allocation)
+    # the same solve() entry point: a rounds config routes to the dynamics
+    # scan, the PRNG key drives the per-round channel sampling
+    rr = solve(Problem(system=sysp, weights=w, rounds=cfg,
+                       key=jax.random.PRNGKey(1), init=base.allocation))
     tot = rr.totals()
     print(f"{name:>15} {tot['energy_total_J']:>10.4g} "
           f"{tot['time_total_s']:>9.4g} "

@@ -1,0 +1,84 @@
+"""repro — FL-MAR resource allocation as a production-scale JAX system.
+
+One solver, one entry point::
+
+    from repro import Problem, SolverSpec, Weights, make_system, solve
+
+    sys_ = make_system(key, n_devices=50)
+    res = solve(Problem(system=sys_, weights=Weights(0.5, 0.5, 1.0)),
+                SolverSpec(max_iters=8, tol=1e-4))
+
+`solve(problem, spec)` routes on `Problem` topology — single cell (BCD),
+stacked ``(C, N)`` fleet (vmap), ``mesh`` (region shard_map), ``rounds``
+(dynamics scan), ``deadline`` (Figs. 8-9 variant). `SolverSpec` is frozen
+and hashable: it (plus shapes) is the entire jit-cache key. Weights are a
+traced ``(3,)``/``(C, 3)`` operand — per-cell / per-request weights never
+recompile.
+
+Migration table (legacy shim -> unified call). Every legacy signature
+still works, delegates verbatim (bit-identical results), and warns
+`DeprecationWarning` once per process:
+
+    ================================  =====================================
+    legacy call                        solve(Problem(...), SolverSpec(...))
+    ================================  =====================================
+    allocate(sys, w, ...)              Problem(system=sys, weights=w)
+    allocate_fleet(batch, w, ...)      Problem(system=batch, weights=w)
+    allocate_region(batch, w, mesh)    Problem(system=batch, weights=w,
+                                               mesh=mesh)
+    run_rounds(key, sys, w, cfg)       Problem(system=sys, weights=w,
+                                               rounds=cfg, key=key)
+    run_rounds_fleet(key, batch, ...)  Problem(system=batch, weights=w,
+                                               rounds=cfg, key=key)
+    run_rounds_region(key, ..., mesh)  Problem(..., rounds=cfg, key=key,
+                                               mesh=mesh)
+    allocate_fixed_deadline(sys, w,    Problem(system=sys, weights=w,
+        T_total, ...)                          deadline=T_total)
+    ================================  =====================================
+
+    old kwarg (any entry point)        SolverSpec field
+    ================================  =====================================
+    max_iters / tol                    max_iters / tol (tol validated
+                                       against the 64-ulp rel-step floor)
+    sp1_method / sp2_method            sp1_method / sp2_method
+    sp2_iters                          sp2_iters
+    keep_history                       keep_history
+    lockstep (region)                  lockstep
+    init / acc / w                     Problem.init / Problem.acc /
+                                       Problem.weights (traced data,
+                                       not cache keys)
+    ================================  =====================================
+
+Subpackages: `repro.core` (paper model + jitted solvers), `repro.region`
+(bucketed, mesh-sharded serving), `repro.dynamics` (round engine),
+`repro.fl` (FedAvg coupling), `repro.kernels` (Pallas kernels).
+"""
+from repro.api import (Problem, SolverSpec, TolFloorWarning, WeightsLike,
+                       rel_step_floor, solve, weights_leaf)
+from repro.core import (AccuracyModel, Allocation, BCDResult, FleetResult,
+                        SystemParams, Weights, allocate,
+                        allocate_fixed_deadline, allocate_fleet,
+                        default_accuracy, make_fleet, make_system,
+                        stack_systems)
+from repro.dynamics import (RoundsConfig, RoundsResult, run_rounds,
+                            run_rounds_fleet)
+from repro.region import (AllocationRequest, CellResponse, RegionAllocator,
+                          RegionResult, allocate_region, region_mesh,
+                          run_rounds_region)
+
+__all__ = [
+    # unified API
+    "Problem", "SolverSpec", "TolFloorWarning", "WeightsLike",
+    "rel_step_floor", "solve", "weights_leaf",
+    # core types + builders
+    "AccuracyModel", "Allocation", "BCDResult", "FleetResult",
+    "SystemParams", "Weights", "default_accuracy", "make_fleet",
+    "make_system", "stack_systems",
+    # dynamics / region
+    "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
+    "RegionAllocator", "RegionResult", "region_mesh",
+    # legacy shims (deprecated; see the migration table above)
+    "allocate", "allocate_fixed_deadline", "allocate_fleet",
+    "allocate_region", "run_rounds", "run_rounds_fleet",
+    "run_rounds_region",
+]

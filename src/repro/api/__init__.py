@@ -1,0 +1,19 @@
+"""repro.api — the unified solver API (one `solve()`, one `SolverSpec`).
+
+    from repro import Problem, SolverSpec, solve
+
+    res = solve(Problem(system=sys, weights=Weights(0.5, 0.5, 1.0)),
+                SolverSpec(max_iters=8, tol=1e-4))
+
+`SolverSpec` carries every static solver option (the jit-cache key);
+`Problem` carries the data (system, traced weights, warm start, mesh,
+rounds config, deadline); `solve` routes on topology. See the package
+docstrings of `api.spec`, `api.problem`, and `api.solve`.
+"""
+from .problem import Problem, WeightsLike, weights_leaf
+from .solve import solve
+from .spec import (REL_STEP_FLOOR_ULPS, SolverSpec, TolFloorWarning,
+                   rel_step_floor)
+
+__all__ = ["Problem", "SolverSpec", "TolFloorWarning", "WeightsLike",
+           "solve", "weights_leaf", "REL_STEP_FLOOR_ULPS", "rel_step_floor"]

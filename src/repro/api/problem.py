@@ -1,0 +1,130 @@
+"""`Problem` — the single description of *what* to solve.
+
+A Problem bundles the system snapshot, the objective weights, and the
+optional extras (warm-start init, accuracy model, device mesh, round
+dynamics, deadline) that used to be scattered across seven entry-point
+signatures. The `solve` dispatcher routes purely on Problem topology:
+
+  * ``system.gain`` 1-D            -> single-cell BCD
+  * ``system.gain`` 2-D (C, N)     -> fleet vmap
+  * ``mesh`` set                   -> region shard_map
+  * ``rounds`` set                 -> round-dynamics scan
+  * ``deadline`` set               -> deadline-constrained BCD (Figs. 8-9)
+
+Weights are *data*, not configuration: `weights_leaf` lowers them to a
+traced ``(3,)`` / ``(C, 3)`` array operand of the jitted solvers, so every
+cell (and every request in a serving trace) can weigh energy / latency /
+accuracy differently with **zero** extra compiles — only `SolverSpec` and
+shapes key the jit cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accuracy import AccuracyModel
+from repro.core.types import Allocation, SystemParams, Weights
+
+Array = jnp.ndarray
+
+#: anything `weights_leaf` lowers: a Weights (scalar or (C,)-array fields),
+#: a per-cell sequence of Weights, or a raw (3,)/(C, 3) array-like
+WeightsLike = Union[Weights, Sequence[Weights], Array, Sequence[float]]
+
+
+def weights_leaf(w: WeightsLike, dtype, cells: Optional[int] = None) -> Array:
+    """Lower weights to the traced array the jitted solvers consume.
+
+    Returns a normalized ``(3,)`` array (single cell) or ``(C, 3)`` array
+    (stacked topologies, with scalar weights broadcast to every cell).
+    `Weights` instances are normalized via `Weights.normalized()` (host
+    float64, exactly as the legacy entry points did — bit-parity); raw
+    arrays are normalized along their last axis.
+    """
+    if isinstance(w, Weights):
+        w = w.normalized()
+        arr = jnp.stack([jnp.asarray(w.w1, dtype), jnp.asarray(w.w2, dtype),
+                         jnp.asarray(w.rho, dtype)], axis=-1)
+    elif isinstance(w, (list, tuple)) and w and isinstance(w[0], Weights):
+        rows = [wc.normalized() for wc in w]
+        arr = jnp.asarray([[wc.w1, wc.w2, wc.rho] for wc in rows], dtype)
+    else:
+        arr = jnp.asarray(w, dtype)
+        if arr.ndim == 0 or arr.shape[-1] != 3:
+            raise ValueError(
+                f"weights_leaf: expected (3,) or (C, 3) (w1, w2, rho) "
+                f"values, got shape {arr.shape}")
+        s = arr[..., 0] + arr[..., 1]
+        try:
+            bad = bool(jnp.any(s <= 0))
+        except jax.errors.TracerBoolConversionError:
+            bad = False   # traced: feasibility is the caller's contract
+        if bad:   # same contract as Weights.normalized()
+            raise ValueError(
+                "w1 + w2 must be positive (paper §VII-A footnote)")
+        arr = arr / s[..., None]
+    if arr.ndim > 2:
+        raise ValueError(f"weights_leaf: too many axes ({arr.shape})")
+    if cells is None:
+        if arr.ndim != 1:
+            raise ValueError(
+                f"weights_leaf: single-cell problem, but weights have a "
+                f"cell axis ({arr.shape})")
+        return arr
+    if arr.ndim == 1:
+        return jnp.broadcast_to(arr, (cells, 3))
+    if arr.shape[0] != cells:
+        raise ValueError(
+            f"weights_leaf: {arr.shape[0]} weight rows for {cells} cells")
+    return arr
+
+
+@dataclasses.dataclass
+class Problem:
+    """One allocation problem: system + weights + optional extras.
+
+    Fields
+    ------
+    system : a `SystemParams` — 1-D ``gain`` is one cell, 2-D ``(C, N)``
+        leaves (from `stack_systems`/`make_fleet`) a fleet.
+    weights : objective weights — a `Weights`, a per-cell sequence of
+        `Weights`, or a raw (3,)/(C, 3) array. Traced per request; never a
+        jit-cache key.
+    acc : accuracy model (default `default_accuracy()`).
+    init : warm-start `Allocation` (leaves shaped like the system).
+    mesh : a jax `Mesh` to shard the cell axis over (stacked systems only).
+    rounds : a `dynamics.RoundsConfig` — solve becomes the R-round
+        dynamics scan; per-round solver options (bcd_iters/bcd_tol/
+        sp*_method) come from the config, which is itself the static jit
+        key for the scan.
+    key : PRNG key for the dynamics channel/participation sampling
+        (required when `rounds` is set).
+    deadline : total completion-time budget T_total — solve becomes the
+        deadline-constrained variant (single cell only).
+    bandwidth_frac : initial bandwidth split fraction for the
+        deadline-constrained cold start (Fig. 9 uses 0.5).
+    """
+    system: SystemParams
+    weights: WeightsLike
+    acc: Optional[AccuracyModel] = None
+    init: Optional[Allocation] = None
+    mesh: Optional[Any] = None
+    rounds: Optional[Any] = None
+    key: Optional[jax.Array] = None
+    deadline: Optional[float] = None
+    bandwidth_frac: float = 1.0
+
+    @property
+    def cells(self) -> Optional[int]:
+        """C for a stacked (C, N) system, None for a single cell."""
+        ndim = jnp.ndim(self.system.gain)
+        if ndim == 1:
+            return None
+        if ndim == 2:
+            return int(jnp.asarray(self.system.gain).shape[0])
+        raise ValueError(
+            f"Problem: system.gain must be (N,) or (C, N), got "
+            f"{jnp.asarray(self.system.gain).shape}")

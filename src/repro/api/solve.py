@@ -1,0 +1,304 @@
+"""`solve(problem, spec)` — the one entry point to Algorithm 2.
+
+The repo grew seven divergent solver signatures (`allocate`,
+`allocate_fixed_deadline`, `allocate_fleet`, `allocate_region`,
+`run_rounds`, `run_rounds_fleet`/`run_rounds_region`, plus the
+`RegionAllocator` kwargs), each re-threading the same static options into
+the jitted impls. `solve` collapses that 4x2 entry-point matrix to one
+code path that routes on `Problem` topology:
+
+    single cell        -> BCD (`BCDResult`)
+    (C, N) stack       -> fleet vmap (`FleetResult`)
+    + mesh             -> region shard_map (`RegionResult`)
+    + rounds config    -> round-dynamics scan (`RoundsResult`)
+    + deadline         -> deadline-constrained BCD (`BCDResult`)
+
+Weights enter the jitted solvers as a traced ``(3,)`` / ``(C, 3)`` operand
+(`api.problem.weights_leaf`), so per-cell / per-request weights cost zero
+extra compiles; `SolverSpec` (+ shapes) is the entire jit-cache key.
+
+The legacy signatures survive as thin deprecation shims over this module —
+each warns `DeprecationWarning` once per process and delegates verbatim, so
+results are bit-identical by construction.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accuracy import default_accuracy
+from repro.core.bcd import (_FIXED_COLS, _LEDGER_COLS, _allocate_fixed_impl,
+                            _allocate_impl, _fleet_cell_fn, _fleet_result,
+                            _init_carry_state, _materialize_history, BCDResult,
+                            initial_allocation)
+from repro.core.types import Allocation, SystemParams
+
+from .problem import Problem, weights_leaf
+from .spec import SolverSpec, warn_tol_floor
+
+Array = jnp.ndarray
+
+# ---------------------------------------------------------------------------
+# deprecation shims: one warning per legacy entry point per process
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str, replacement: str) -> None:
+    """Warn once per process that `name` is a legacy shim over `solve`."""
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro: {name}() is a deprecated shim; use "
+        f"repro.solve({replacement}) — see the migration table in the "
+        f"repro package docstring.", DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_registry() -> None:
+    """Testing hook: make every shim warn again."""
+    _DEPRECATION_WARNED.clear()
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+def _cast_tree(tree, dtype):
+    """Cast every floating leaf to `dtype` (bool masks / int leaves kept)."""
+    def cast(x):
+        x = jnp.asarray(x)
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def _apply_dtype(system: SystemParams, init: Optional[Allocation],
+                 dtype: Optional[str]):
+    if dtype is None:
+        return system, init
+    return (_cast_tree(system, dtype),
+            None if init is None else _cast_tree(init, dtype))
+
+
+# ---------------------------------------------------------------------------
+# the dispatcher
+# ---------------------------------------------------------------------------
+
+def solve(problem: Problem, spec: Optional[SolverSpec] = None):
+    """Solve one `Problem` under one `SolverSpec`; route on topology.
+
+    Returns the per-topology result type (`BCDResult`, `FleetResult`,
+    `RegionResult`, or `RoundsResult`) — bit-identical to the legacy entry
+    point it replaces (parity-tested in tests/test_api_parity.py).
+    """
+    spec = SolverSpec() if spec is None else spec
+    cells = problem.cells   # also validates system.gain is 1-D or 2-D
+    sysp, init = _apply_dtype(problem.system, problem.init, spec.dtype)
+    if problem.rounds is None:
+        # rounds problems take their BCD tol from the RoundsConfig instead
+        warn_tol_floor(spec.tol, jnp.asarray(sysp.gain).dtype)
+    if spec.lockstep and problem.mesh is None:
+        # lockstep selects the GSPMD execution mode of a mesh solve; on a
+        # meshless problem it would silently do nothing
+        raise ValueError("solve: SolverSpec.lockstep requires Problem.mesh")
+    if problem.rounds is not None:
+        if problem.deadline is not None:
+            raise ValueError("solve: rounds and deadline are exclusive")
+        if problem.key is None:
+            raise ValueError(
+                "solve: a rounds problem needs problem.key (PRNG key for "
+                "the channel / participation sampling)")
+        # the per-round solver options live on RoundsConfig (itself the
+        # scan's static jit key); silently dropping a tuned spec here
+        # would mislead, so only the fields the rounds paths actually
+        # consult (lockstep, dtype) may differ from the defaults
+        ref = SolverSpec(lockstep=spec.lockstep, dtype=spec.dtype)
+        if spec != ref:
+            raise ValueError(
+                "solve: a rounds problem takes its BCD options "
+                "(bcd_iters/bcd_tol/sp*_method) from the RoundsConfig, "
+                "not from SolverSpec — configure problem.rounds instead "
+                "(only SolverSpec.lockstep and .dtype apply here)")
+        if problem.mesh is not None:
+            if cells is None:
+                raise ValueError("solve: mesh requires a stacked (C, N) "
+                                 "system (stack_systems / make_fleet)")
+            return _solve_rounds_region(problem, spec, sysp, init)
+        if cells is None:
+            return _solve_rounds(problem, spec, sysp, init)
+        return _solve_rounds_fleet(problem, spec, sysp, init)
+    if problem.deadline is not None:
+        if cells is not None or problem.mesh is not None:
+            raise NotImplementedError(
+                "solve: the deadline-constrained variant is single-cell "
+                "(stack/mesh support is open)")
+        return _solve_fixed(problem, spec, sysp, init)
+    if problem.mesh is not None:
+        if cells is None:
+            raise ValueError("solve: mesh requires a stacked (C, N) system "
+                             "(stack_systems / make_fleet)")
+        return _solve_region(problem, spec, sysp, init)
+    if cells is None:
+        return _solve_single(problem, spec, sysp, init)
+    return _solve_fleet(problem, spec, sysp, init)
+
+
+# ---------------------------------------------------------------------------
+# per-topology drivers (the former entry-point bodies, now the only copy)
+# ---------------------------------------------------------------------------
+
+def _bcd_result(out, alloc0, spec: SolverSpec, cols, objective_col: str,
+                with_s_relaxed: bool) -> BCDResult:
+    """Shared single-cell result assembly: materialize the ledger (or, with
+    keep_history=False, pull only the objective scalar — cols[0] is the
+    objective column for the free solve and "energy" for the fixed one,
+    both at ledger index of `objective_col`), and hand back the untouched
+    init when max_iters=0 ran nothing (objective NaN, the PR 1 regression
+    contract)."""
+    B, pw, f, s, s_hat, T, iters, conv, ledger = out
+    iters = int(iters)
+    if spec.keep_history:
+        history = _materialize_history(np.asarray(ledger), iters, cols)
+        objective = history[-1][objective_col] if history else float("nan")
+    else:
+        history = []
+        col = cols.index(objective_col)
+        objective = float(ledger[iters - 1, col]) if iters else float("nan")
+    allocation = Allocation(bandwidth=B, power=pw, freq=f, resolution=s,
+                            s_relaxed=s_hat if with_s_relaxed else None,
+                            T=T) if iters else alloc0
+    return BCDResult(allocation=allocation, objective=objective,
+                     history=history, iters=iters, converged=bool(conv))
+
+
+def _solve_single(p: Problem, spec: SolverSpec, sysp, init) -> BCDResult:
+    acc = p.acc if p.acc is not None else default_accuracy()
+    alloc0 = init if init is not None else initial_allocation(sysp)
+    state0 = _init_carry_state(sysp, alloc0)
+    warr = weights_leaf(p.weights, state0[0].dtype)
+    out = _allocate_impl(
+        sysp, warr, acc, state0, spec.max_iters, spec.tol,
+        spec.sp1_method, spec.sp2_method, spec.sp2_iters)
+    return _bcd_result(out, alloc0, spec, _LEDGER_COLS, "objective",
+                       with_s_relaxed=True)
+
+
+def _solve_fixed(p: Problem, spec: SolverSpec, sysp, init) -> BCDResult:
+    acc = p.acc if p.acc is not None else default_accuracy()
+    T_round = p.deadline / sysp.global_rounds
+    alloc0 = init if init is not None else initial_allocation(
+        sysp, bandwidth_frac=p.bandwidth_frac)
+    state0 = _init_carry_state(sysp, alloc0)
+    dtype = state0[0].dtype
+    warr = weights_leaf(p.weights, dtype)
+    out = _allocate_fixed_impl(
+        sysp, warr, acc, jnp.asarray(T_round, dtype), state0,
+        spec.max_iters, spec.tol, spec.sp2_method, spec.sp2_iters)
+    return _bcd_result(out, alloc0, spec, _FIXED_COLS, "energy",
+                       with_s_relaxed=False)
+
+
+def _solve_fleet(p: Problem, spec: SolverSpec, sysp, init):
+    acc = p.acc if p.acc is not None else default_accuracy()
+    dtype = jnp.asarray(sysp.gain).dtype
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    warr = weights_leaf(p.weights, dtype, cells=C)
+    fn = _fleet_cell_fn(acc, spec.max_iters, spec.tol, spec.sp1_method,
+                        spec.sp2_method, spec.sp2_iters,
+                        with_init=init is not None)
+    out = jax.vmap(fn)(sysp, warr) if init is None \
+        else jax.vmap(fn)(sysp, warr, init)
+    return _fleet_result(out, spec.max_iters, dtype)
+
+
+def _solve_region(p: Problem, spec: SolverSpec, sysp, init):
+    from repro.region.mesh import (RegionResult, _pack_stats,
+                                   _region_solve_impl, _slice_fleet,
+                                   pad_cells, place_cells)
+
+    mesh = p.mesh
+    acc = p.acc if p.acc is not None else default_accuracy()
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    D = int(mesh.devices.size)
+    Cp = -(-C // D) * D
+    dtype = jnp.asarray(sysp.gain).dtype
+    sysb = place_cells(pad_cells(sysp, Cp), mesh)
+    initb = None if init is None else place_cells(pad_cells(init, Cp), mesh)
+    warr = place_cells(pad_cells(weights_leaf(p.weights, dtype, cells=C),
+                                 Cp), mesh)
+    out = _region_solve_impl(sysb, warr, initb, jnp.asarray(spec.tol, dtype),
+                             acc, spec.max_iters, spec.sp1_method,
+                             spec.sp2_method, spec.sp2_iters, mesh,
+                             spec.lockstep, init is not None)
+    fleet = _slice_fleet(_fleet_result(out, spec.max_iters, dtype), C)
+    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
+                        _n_cells=C, _mesh_devices=D)
+
+
+def _solve_rounds(p: Problem, spec: SolverSpec, sysp, init):
+    from repro.dynamics.engine import (_check_simulation_init, _result,
+                                       _run_rounds_impl)
+
+    acc = p.acc if p.acc is not None else default_accuracy()
+    cfg = p.rounds
+    _check_simulation_init(cfg, init)
+    alloc0 = init if init is not None else initial_allocation(sysp)
+    state0 = _init_carry_state(sysp, alloc0)
+    warr = weights_leaf(p.weights, state0[0].dtype)
+    return _result(_run_rounds_impl(sysp, warr, acc, p.key, state0, cfg))
+
+
+def _solve_rounds_fleet(p: Problem, spec: SolverSpec, sysp, init):
+    from repro.dynamics.engine import (_check_simulation_init, _result,
+                                       _run_rounds_fleet_impl)
+
+    acc = p.acc if p.acc is not None else default_accuracy()
+    cfg = p.rounds
+    _check_simulation_init(cfg, init)
+    dtype = jnp.asarray(sysp.gain).dtype
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    warr = weights_leaf(p.weights, dtype, cells=C)
+    keys = jax.random.split(p.key, C)
+    init_state = None if init is None else jax.vmap(_init_carry_state)(
+        sysp, init)
+    return _result(_run_rounds_fleet_impl(sysp, warr, acc, keys, init_state,
+                                          cfg))
+
+
+def _solve_rounds_region(p: Problem, spec: SolverSpec, sysp, init):
+    from repro.dynamics.config import RoundsResult
+    from repro.dynamics.engine import _check_simulation_init, _result
+    from repro.region.mesh import (_region_rounds_impl, pad_cells,
+                                   place_cells)
+
+    mesh = p.mesh
+    acc = p.acc if p.acc is not None else default_accuracy()
+    cfg = p.rounds
+    _check_simulation_init(cfg, init)
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    D = int(mesh.devices.size)
+    Cp = -(-C // D) * D
+    dtype = jnp.asarray(sysp.gain).dtype
+    warr = place_cells(pad_cells(weights_leaf(p.weights, dtype, cells=C),
+                                 Cp), mesh)
+    keys = pad_cells(jax.random.split(p.key, C), Cp)
+    sysb = place_cells(pad_cells(sysp, Cp), mesh)
+    keysb = place_cells(keys, mesh)
+    init_state = None if init is None else jax.vmap(_init_carry_state)(
+        sysp, init)
+    initb = None if init_state is None else place_cells(
+        pad_cells(init_state, Cp), mesh)
+    out = _region_rounds_impl(sysb, warr, keysb, initb, acc, cfg, mesh,
+                              spec.lockstep, init_state is not None)
+    res = _result(out)
+    cut = lambda x: x[:C]
+    return RoundsResult(
+        allocation=jax.tree_util.tree_map(cut, res.allocation),
+        ledger=cut(res.ledger), staleness=cut(res.staleness),
+        gains=cut(res.gains), resolutions=cut(res.resolutions),
+        columns=res.columns)

@@ -1,11 +1,21 @@
 """repro.core — the paper's contribution: FL-MAR joint resource allocation.
 
+The solver entry point is the unified `repro.solve(Problem, SolverSpec)`
+(see the migration table in the `repro` package docstring); this package
+holds the model (types, energy/accuracy, SP1/SP2, the jitted BCD impls)
+and the system builders.
+
 Public API:
-    make_system            build a SystemParams per the paper's §VII-A setup
-    Weights, Allocation    objective weights / decision variables
-    allocate               Algorithm 2 (BCD over SP1 + SP2)
-    allocate_fixed_deadline  deadline-constrained variant (Figs. 8-9)
-    objective, summarize   system-model evaluation (eqs. 1-13)
+    make_system / make_fleet  build SystemParams per the paper's §VII-A
+                              setup (single cell / stacked (C, N) fleet)
+    Weights, Allocation       objective weights / decision variables —
+                              weights are traced solver *data*, scalar or
+                              per-cell (C,), never a jit-cache key
+    stack_systems             batch heterogeneous cells into one pytree
+    objective, summarize      system-model evaluation (eqs. 1-13)
+    allocate, allocate_fleet, allocate_fixed_deadline
+                              deprecated shims over `repro.solve`
+                              (bit-identical; warn once per process)
 """
 from .accuracy import (AccuracyModel, LinearAccuracy, LogAccuracy,
                        default_accuracy, linear_from_endpoints, log_fit)

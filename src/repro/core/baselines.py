@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from .accuracy import AccuracyModel, default_accuracy
-from .bcd import BCDResult, allocate_fixed_deadline, initial_allocation
+from .bcd import BCDResult, initial_allocation
 from .sp1 import solve_sp1_fixed_T
 from .sp2 import r_min, solve_sp2
 from .types import Allocation, SystemParams, Weights
@@ -116,7 +116,9 @@ def conference_version(sys: SystemParams, w: Weights, T_total: float,
     """The paper's ICDCS conference algorithm [1]: joint (p, B, f) under a
     deadline, no resolution variable (s pinned to the standard sample) —
     what Fig. 9 actually compares against Scheme 1."""
+    from repro.api import Problem, SolverSpec, solve
+
     pinned = sys.replace(resolutions=(sys.s_standard,))
-    return allocate_fixed_deadline(
-        pinned, Weights(w.w1, w.w2, 0.0), T_total,
-        acc=default_accuracy(), max_iters=max_iters)
+    return solve(Problem(system=pinned, weights=Weights(w.w1, w.w2, 0.0),
+                         acc=default_accuracy(), deadline=T_total),
+                 SolverSpec(max_iters=max_iters))

@@ -5,7 +5,15 @@ convergence check: no Python-level `float()` / `.tolist()` syncs inside the
 iteration. Per-iteration metrics accumulate into a fixed-size traced ledger
 (one row per iteration) that is materialized into `BCDResult.history`
 exactly once, after the loop finishes. Because the whole solve is one traced
-computation, it `vmap`s across base-station cells — see `allocate_fleet`.
+computation, it `vmap`s across base-station cells.
+
+This module now holds the jitted *impls* plus the shared result types; the
+drivers live behind the unified entry point `repro.solve(Problem, SolverSpec)`
+(`repro.api.solve`). The historical signatures `allocate` /
+`allocate_fixed_deadline` / `allocate_fleet` remain as thin deprecation
+shims over it — same results, bit-identical, one `DeprecationWarning` per
+process. Objective weights are a traced `(3,)` (per cell) operand of
+`_allocate_impl`, never part of the jit-cache key.
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ import numpy as np
 from jax import lax
 
 from . import energy as en
-from .accuracy import AccuracyModel, default_accuracy
+from .accuracy import AccuracyModel
 from .energy import rate as _rate
 from .sp1 import _SP1_IMPLS, _solve_sp1_fixed_impl
 from .sp2 import _golden_argmin, _sp2_direct_impl, _sp2_jong_core, r_min
@@ -202,40 +210,20 @@ def allocate(sys: SystemParams, w: Weights, acc: Optional[AccuracyModel] = None,
              sp2_iters: int = 30, sp2_method: str = "direct",
              sp1_method: str = "sweep",
              keep_history: bool = True) -> BCDResult:
-    """Algorithm 2: alternate SP1 (f, s, T) and SP2 (p, B) until convergence.
+    """Deprecated shim: Algorithm 2 through `repro.solve`.
 
-    sp1_method: "sweep" (batched T-grid dual sweep, the default) or "bisect"
-    (the original nested bisection, the sweep's parity oracle).
-    sp2_method: "direct" (exact boundary-power convex solve, beyond-paper,
-    the default engine) or "jong" (the paper's Algorithm 1 Newton-like loop).
-    The whole BCD iteration compiles to one jitted computation; convergence
-    is decided on device and the history ledger crosses the host boundary
-    exactly once, at the end.
-
-    keep_history=False skips that one device->host ledger copy entirely
-    (history comes back []); only the objective scalar is pulled. This is
-    the service hot path — per-request latency is dominated by transfers
-    once the solve is warm-started.
+    Equivalent to ``solve(Problem(system=sys, weights=w, acc=acc, init=init),
+    SolverSpec(max_iters=..., tol=..., ...))`` — bit-identical results, one
+    `DeprecationWarning` per process.
     """
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    alloc0 = init if init is not None else initial_allocation(sys)
-    state0 = _init_carry_state(sys, alloc0)
-    warr = jnp.asarray([w.w1, w.w2, w.rho], state0[0].dtype)
-    B, p, f, s, s_hat, T, iters, conv, ledger = _allocate_impl(
-        sys, warr, acc, state0, max_iters, tol, sp1_method, sp2_method,
-        sp2_iters)
-    iters = int(iters)
-    if keep_history:
-        history = _materialize_history(np.asarray(ledger), iters, _LEDGER_COLS)
-        objective = history[-1]["objective"] if history else float("nan")
-    else:
-        history = []
-        objective = float(ledger[iters - 1, 0]) if iters else float("nan")
-    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
-                            s_relaxed=s_hat, T=T) if iters else alloc0
-    return BCDResult(allocation=allocation, objective=objective,
-                     history=history, iters=iters, converged=bool(conv))
+    from repro.api import Problem, SolverSpec, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("allocate", "Problem(system, weights), SolverSpec(...)")
+    return solve(Problem(system=sys, weights=w, acc=acc, init=init),
+                 SolverSpec(max_iters=max_iters, tol=tol,
+                            sp1_method=sp1_method, sp2_method=sp2_method,
+                            sp2_iters=sp2_iters, keep_history=keep_history))
 
 
 def _optimal_split(sys: SystemParams, s: Array, bandwidth: Array,
@@ -264,10 +252,16 @@ def _optimal_split(sys: SystemParams, s: Array, bandwidth: Array,
     return jnp.clip(tt, tt_min, 0.95 * T_round)
 
 
-@partial(jax.jit, static_argnames=("acc", "max_iters"))
+@partial(jax.jit, static_argnames=("acc", "max_iters", "sp2_method",
+                                   "sp2_iters"))
 def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
-                         T_round, state0, max_iters: int, tol):
-    """Device-resident deadline-constrained BCD (Figs. 8-9 variant)."""
+                         T_round, state0, max_iters: int, tol,
+                         sp2_method: str = "direct", sp2_iters: int = 30):
+    """Device-resident deadline-constrained BCD (Figs. 8-9 variant).
+
+    Takes the same SolverSpec-sourced sp2 options as `_allocate_impl`
+    (`sp1_method` does not apply: the fixed-T subproblem has no T search to
+    sweep or bisect, `_solve_sp1_fixed_impl` is closed-form)."""
     dtype = state0[0].dtype
 
     def step(state):
@@ -281,7 +275,11 @@ def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
         # E_cmp = kappa cyc^3/(T-tt)^2 rises, E_trans falls; golden section).
         tt_opt = _optimal_split(sys, s, B, T_round)
         rmin = sys.bits / tt_opt
-        p_new, B_new, _ = _sp2_direct_impl(sys, rmin)
+        if sp2_method == "direct":
+            p_new, B_new, _ = _sp2_direct_impl(sys, rmin)
+        else:
+            p_new, B_new, _, _, _, _ = _sp2_jong_core(
+                sys, warr[0], rmin, p, B, max_iters=sp2_iters)
         # recompute f against the achieved transmission time
         tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
         cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
@@ -303,26 +301,28 @@ def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
                             acc: Optional[AccuracyModel] = None,
                             max_iters: int = 20, tol: float = 1e-6,
                             init: Optional[Allocation] = None,
-                            bandwidth_frac: float = 1.0) -> BCDResult:
-    """Deadline-constrained variant (Figs. 8-9): total completion time is a hard
-    constraint, the objective is (mostly) energy: w1 ~ 0.99, w2 ~ 0.01."""
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    T_round = T_total / sys.global_rounds
-    alloc0 = init if init is not None else initial_allocation(
-        sys, bandwidth_frac=bandwidth_frac)
-    state0 = _init_carry_state(sys, alloc0)
-    dtype = state0[0].dtype
-    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-    B, p, f, s, s_hat, T, iters, conv, ledger = _allocate_fixed_impl(
-        sys, warr, acc, jnp.asarray(T_round, dtype), state0, max_iters, tol)
-    iters = int(iters)
-    history = _materialize_history(np.asarray(ledger), iters, _FIXED_COLS)
-    allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
-                            T=T) if iters else alloc0
-    return BCDResult(allocation=allocation,
-                     objective=history[-1]["energy"] if history else float("nan"),
-                     history=history, iters=iters, converged=bool(conv))
+                            bandwidth_frac: float = 1.0,
+                            sp2_iters: int = 30, sp2_method: str = "direct",
+                            keep_history: bool = True) -> BCDResult:
+    """Deprecated shim: the deadline-constrained variant through `repro.solve`.
+
+    Equivalent to ``solve(Problem(system=sys, weights=w, deadline=T_total,
+    ...), SolverSpec(...))``. Now wired through the same SolverSpec path as
+    every other entry point, so it accepts the warm-start ``init`` and the
+    sp2 engine options the free-deadline solver grew (the fixed-T
+    subproblem has no T search, so ``sp1_method`` does not apply).
+    """
+    from repro.api import Problem, SolverSpec, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("allocate_fixed_deadline",
+                     "Problem(system, weights, deadline=T_total), "
+                     "SolverSpec(...)")
+    return solve(Problem(system=sys, weights=w, acc=acc, init=init,
+                         deadline=T_total, bandwidth_frac=bandwidth_frac),
+                 SolverSpec(max_iters=max_iters, tol=tol,
+                            sp2_method=sp2_method, sp2_iters=sp2_iters,
+                            keep_history=keep_history))
 
 
 # ----------------------------------------------------------------------------
@@ -355,18 +355,22 @@ def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *systems)
 
 
-def _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
+def _fleet_cell_fn(acc, max_iters, tol, sp1_method, sp2_method,
                    sp2_iters, with_init: bool):
-    """Per-cell solver closure shared by `allocate_fleet` (plain vmap) and
-    `region.allocate_region` (vmap inside shard_map)."""
-    def warm(sysc, alloc0):
+    """Per-cell solver closure shared by the fleet vmap and the region
+    shard_map (`api.solve._solve_fleet` / `_solve_region`). The weights
+    array is a *vmapped operand* — each cell carries its own traced (3,)
+    row of a (C, 3) stack, so per-cell/per-request weights share one
+    compiled program."""
+    def warm(sysc, warr_c, alloc0):
         state0 = _init_carry_state(sysc, alloc0)
-        return _allocate_impl(sysc, warr, acc, state0, max_iters, tol,
+        return _allocate_impl(sysc, warr_c, acc, state0, max_iters, tol,
                               sp1_method, sp2_method, sp2_iters)
 
     if with_init:
         return warm
-    return lambda sysc: warm(sysc, initial_allocation(sysc))
+    return lambda sysc, warr_c: warm(sysc, warr_c,
+                                     initial_allocation(sysc))
 
 
 def _fleet_result(out, max_iters: int, dtype) -> FleetResult:
@@ -392,27 +396,20 @@ def allocate_fleet(sys_batch: SystemParams, w: Weights,
                    sp2_iters: int = 30,
                    sp2_method: str = "direct",
                    sp1_method: str = "sweep") -> FleetResult:
-    """Batched Algorithm 2: `vmap` of the jitted BCD loop across cells.
+    """Deprecated shim: batched Algorithm 2 through `repro.solve`.
 
-    sys_batch: a SystemParams whose per-device leaves are (C, N) and per-cell
-    scalars are (C,) — build it with `stack_systems` or `make_fleet`. Cells
-    may be heterogeneous (different bandwidth_total / p_max / ... per cell).
-    Everything stays on device; one call solves all C cells (64 cells x 2048
-    devices is a single XLA program, no Python loop).
-
-    init: optional warm-start Allocation with (C, N) leaves (e.g. a previous
-    FleetResult.allocation); a warm start near the solution converges in a
-    couple of BCD iterations instead of a cold solve.
-
-    To shard the cell axis across a device mesh, see
-    `repro.region.allocate_region`.
+    Equivalent to ``solve(Problem(system=sys_batch, weights=w, ...),
+    SolverSpec(...))`` on a stacked (C, N) system (`stack_systems` /
+    `make_fleet`). The new path also takes per-cell weights — pass a
+    sequence of `Weights` (or a (C, 3) array) as `Problem.weights`.
+    To shard the cell axis across a device mesh, set `Problem.mesh`.
     """
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    dtype = jnp.asarray(sys_batch.gain).dtype
-    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-    fn = _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
-                        sp2_iters, with_init=init is not None)
-    out = jax.vmap(fn)(sys_batch) if init is None \
-        else jax.vmap(fn)(sys_batch, init)
-    return _fleet_result(out, max_iters, dtype)
+    from repro.api import Problem, SolverSpec, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("allocate_fleet",
+                     "Problem(system=sys_batch, weights), SolverSpec(...)")
+    return solve(Problem(system=sys_batch, weights=w, acc=acc, init=init),
+                 SolverSpec(max_iters=max_iters, tol=tol,
+                            sp1_method=sp1_method, sp2_method=sp2_method,
+                            sp2_iters=sp2_iters))

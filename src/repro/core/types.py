@@ -103,14 +103,23 @@ class SystemParams:
 
 @dataclasses.dataclass(frozen=True)
 class Weights:
-    """Objective weights (paper eq. 12). w1 + w2 is normalized to 1."""
+    """Objective weights (paper eq. 12). w1 + w2 is normalized to 1.
+
+    Fields may be Python scalars (one cell) or (C,) arrays (per-cell weights
+    in a stacked fleet). The solvers consume weights as a traced (3,)/(C, 3)
+    array operand (`repro.api.weights_leaf`), never as a jit-cache key — so
+    every cell/request can carry different weights at zero extra compiles."""
     w1: float
     w2: float
     rho: float
 
     def normalized(self) -> "Weights":
         s = self.w1 + self.w2
-        if s <= 0:
+        try:
+            bad = bool(np.any(np.asarray(s) <= 0))
+        except jax.errors.TracerArrayConversionError:
+            bad = False   # traced: feasibility is the caller's contract
+        if bad:
             raise ValueError("w1 + w2 must be positive (paper §VII-A footnote)")
         return Weights(self.w1 / s, self.w2 / s, self.rho / s)
 

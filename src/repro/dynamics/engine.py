@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import energy as en
-from repro.core.accuracy import AccuracyModel, default_accuracy
+from repro.core.accuracy import AccuracyModel
 from repro.core.bcd import _allocate_impl, _init_carry_state, initial_allocation
 from repro.core.channel import drift_shadowing, sample_gain, shadowing_to_gain
 from repro.core.types import Allocation, SystemParams, Weights
@@ -161,15 +161,17 @@ def _run_rounds_impl(sys, warr, acc, key, state0, cfg):
 
 @partial(jax.jit, static_argnames=("acc", "cfg"))
 def _run_rounds_fleet_impl(sys_batch, warr, acc, keys, init_state, cfg):
+    """warr is the (C, 3) per-cell weights stack — a traced vmapped operand,
+    so mixed per-cell weights share this one jit cache entry."""
     if init_state is None:
-        def one(sysc, kc):
+        def one(sysc, warr_c, kc):
             st = _init_carry_state(sysc, initial_allocation(sysc))
-            return _cell_engine(sysc, warr, acc, kc, st, cfg)
-        return jax.vmap(one)(sys_batch, keys)
+            return _cell_engine(sysc, warr_c, acc, kc, st, cfg)
+        return jax.vmap(one)(sys_batch, warr, keys)
 
-    def one(sysc, kc, st):
-        return _cell_engine(sysc, warr, acc, kc, st, cfg)
-    return jax.vmap(one)(sys_batch, keys, init_state)
+    def one(sysc, warr_c, kc, st):
+        return _cell_engine(sysc, warr_c, acc, kc, st, cfg)
+    return jax.vmap(one)(sys_batch, warr, keys, init_state)
 
 
 def _result(out) -> RoundsResult:
@@ -197,43 +199,38 @@ def run_rounds(key: jax.Array, sys: SystemParams, w: Weights,
                cfg: RoundsConfig,
                acc: Optional[AccuracyModel] = None,
                init: Optional[Allocation] = None) -> RoundsResult:
-    """Run `cfg.rounds` global rounds for one cell as a single jitted scan.
+    """Deprecated shim: the single-cell round scan through `repro.solve`.
 
-    init: warm-start allocation for round 1 (default: the paper's feasible
-    start). With `cfg.bcd_iters == 0` the init is *simulated* unchanged each
-    round (no re-allocation) and must carry a makespan `T` for the straggler
-    deadline — e.g. a `BCDResult.allocation` from `allocate`.
+    Equivalent to ``solve(Problem(system=sys, weights=w, rounds=cfg,
+    key=key, init=init))``. With `cfg.bcd_iters == 0` the init is
+    *simulated* unchanged each round (no re-allocation) and must carry a
+    makespan `T` for the straggler deadline.
     """
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    _check_simulation_init(cfg, init)
-    alloc0 = init if init is not None else initial_allocation(sys)
-    state0 = _init_carry_state(sys, alloc0)
-    warr = jnp.asarray([w.w1, w.w2, w.rho], state0[0].dtype)
-    return _result(_run_rounds_impl(sys, warr, acc, key, state0, cfg))
+    from repro.api import Problem, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("run_rounds",
+                     "Problem(system, weights, rounds=cfg, key=key)")
+    return solve(Problem(system=sys, weights=w, acc=acc, init=init,
+                         rounds=cfg, key=key))
 
 
 def run_rounds_fleet(key: jax.Array, sys_batch: SystemParams, w: Weights,
                      cfg: RoundsConfig,
                      acc: Optional[AccuracyModel] = None,
                      init: Optional[Allocation] = None) -> RoundsResult:
-    """`run_rounds` vmapped across C stacked cells (one XLA program).
+    """Deprecated shim: the fleet round scan through `repro.solve`.
 
-    sys_batch: (C, N) leaves from `stack_systems`/`make_fleet`; init, if
-    given, must have (C, N) leaves (e.g. FleetResult.allocation). Cell c
-    consumes the c-th split of `key`, so results match per-cell `run_rounds`
-    calls with those keys. Result leaves carry a leading cell axis:
-    allocation (C, N), ledger (C, R, cols), staleness/gains (C, R, N).
+    Equivalent to ``solve(Problem(system=sys_batch, weights=w, rounds=cfg,
+    key=key, init=init))``. Cell c consumes the c-th split of `key`, so
+    results match per-cell `run_rounds` calls with those keys. Per-cell
+    weights: pass a sequence of `Weights` as `Problem.weights`.
     """
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    _check_simulation_init(cfg, init)
-    dtype = jnp.asarray(sys_batch.gain).dtype
-    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-    keys = jax.random.split(key, sys_batch.gain.shape[0])
-    # vmap the state build so an init without T/s_relaxed still yields
-    # per-cell (C,)-batched carry leaves
-    init_state = None if init is None else jax.vmap(_init_carry_state)(
-        sys_batch, init)
-    return _result(_run_rounds_fleet_impl(
-        sys_batch, warr, acc, keys, init_state, cfg))
+    from repro.api import Problem, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("run_rounds_fleet",
+                     "Problem(system=sys_batch, weights, rounds=cfg, "
+                     "key=key)")
+    return solve(Problem(system=sys_batch, weights=w, acc=acc, init=init,
+                         rounds=cfg, key=key))

@@ -22,9 +22,10 @@ from typing import Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import Allocation, SystemParams, Weights, allocate
+from repro.api import Problem, SolverSpec, solve
+from repro.core import Allocation, SystemParams, Weights
 from repro.core.accuracy import AccuracyModel, default_accuracy
-from repro.dynamics import RoundsConfig, RoundsResult, run_rounds
+from repro.dynamics import RoundsConfig, RoundsResult
 from repro.fl.data import FLDataset, make_federated_dataset
 from repro.fl.server import FLRunResult, run_federated
 
@@ -58,7 +59,8 @@ def simulate(key: jax.Array, sys: SystemParams, w: Weights,
              global_rounds: int = 10, local_iters: int = 5,
              lr: float = 0.05, split: str = "iid",
              unbalanced: bool = False,
-             dynamics: Optional[RoundsConfig] = None) -> SimResult:
+             dynamics: Optional[RoundsConfig] = None,
+             spec: Optional[SolverSpec] = None) -> SimResult:
     """Allocate resources, run FedAvg at the allocated resolutions, and return
     the realized energy/time ledger (paper eqs. 9 & 11).
 
@@ -67,6 +69,11 @@ def simulate(key: jax.Array, sys: SystemParams, w: Weights,
     physics and the FL training see the same number of rounds. The default
     is the static/full-participation config, which reproduces the historical
     allocate-once ledger.
+
+    spec: SolverSpec for the seeding cold solve (default: the historical
+    max_iters=8 calibration). Allocation physics runs through the unified
+    `repro.solve` dispatcher; the per-round solver options come from
+    `dynamics` itself.
     """
     # keep the historical 2-way split so same-seed dataset/FL streams still
     # reproduce pre-engine runs; the dynamics stream is a fresh fold
@@ -82,14 +89,16 @@ def simulate(key: jax.Array, sys: SystemParams, w: Weights,
     # it fixed (bcd_iters=0 — the historical allocate-once ledger, no
     # per-round re-solve), the dynamics path warm-starts round 1 from it so
     # no round ever trains on an unconverged cold-capped allocation
-    init = allocate(sys, w, acc=acc, max_iters=8).allocation
+    seed_spec = spec if spec is not None else SolverSpec(max_iters=8)
+    init = solve(Problem(system=sys, weights=w, acc=acc), seed_spec).allocation
     if dynamics is None:
         cfg = RoundsConfig(rounds=global_rounds, bcd_iters=0)
     else:
         cfg = dynamics
         if cfg.rounds != global_rounds:
             cfg = dataclasses.replace(cfg, rounds=global_rounds)
-    rr = run_rounds(k_dyn, sys, w, cfg, acc=acc, init=init)
+    rr = solve(Problem(system=sys, weights=w, acc=acc, init=init,
+                       rounds=cfg, key=k_dyn))
     alloc = rr.allocation
     # clients pre-render at the ROUND-0 resolutions: round 0's training can't
     # see the final round's channel state (under the static default all

@@ -1,17 +1,24 @@
 """repro.region — region-scale sharded allocation service (beyond paper).
 
-The paper solves one cell of N MAR devices; this package turns the
-single-host `allocate_fleet`/`run_rounds_fleet` pair into a service for a
-*region* — many heterogeneous cells, millions of clients — in three layers:
+The paper solves one cell of N MAR devices; this package scales the
+unified `repro.solve` dispatcher to a *region* — many heterogeneous cells,
+millions of clients — in three layers:
 
   * mesh   (`region.mesh`):  shard the cell axis of a stacked fleet across
-    a device mesh (`region_mesh`, `allocate_region`, `run_rounds_region`);
+    a device mesh — set `Problem.mesh` (built with `region_mesh`) and
+    `solve` runs the vmapped BCD under shard_map with shard-local
+    convergence exit (`SolverSpec.lockstep=True` keeps the pure-jit GSPMD
+    path). `allocate_region`/`run_rounds_region` survive as deprecated
+    shims;
   * batch  (`region.batch`): pad mixed-size cell pools onto a power-of-two
     bucket menu with masked devices (`pad_system`, `bucket_size`) so real
     traffic compiles into a handful of shapes;
   * service (`region.service`): a streaming front-end (`RegionAllocator`)
-    that coalesces allocation requests into bucketed shard-ready batches
-    and warm-starts re-requests from an LRU cache of previous solutions.
+    that coalesces allocation requests into bucketed shard-ready batches,
+    warm-starts re-requests from an LRU cache of previous solutions, and
+    takes PER-REQUEST `Weights` — a traced (C, 3) operand of the one
+    compiled solve, so a mixed-demand region costs zero extra compiles
+    (the jit-cache key is `SolverSpec` + the bucket menu, nothing else).
 
 CPU dev recipe: XLA_FLAGS=--xla_force_host_platform_device_count=8 makes
 one host expose 8 devices for the mesh (see ROADMAP "Region service").

@@ -1,8 +1,9 @@
 """Mesh layer: shard the cell axis of a stacked fleet across local devices.
 
-`allocate_fleet` vmaps the jitted BCD across cells on ONE device; a region
-is C cells x N devices where C x N is millions of clients, so the cell axis
-must spread over a device mesh. Two execution modes:
+The fleet path of `repro.solve` vmaps the jitted BCD across cells on ONE
+device; a region is C cells x N devices where C x N is millions of clients,
+so the cell axis must spread over a device mesh (`Problem.mesh`). Two
+execution modes (`SolverSpec.lockstep`):
 
   * `lockstep=True`: pure jit with `NamedSharding`-placed inputs — GSPMD
     partitions the vmapped solve along `cells`. The BCD `lax.while_loop`
@@ -31,8 +32,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.accuracy import AccuracyModel, default_accuracy
-from repro.core.bcd import FleetResult, _fleet_cell_fn, _fleet_result
+from repro.core.accuracy import AccuracyModel
+from repro.core.bcd import FleetResult, _fleet_cell_fn
 from repro.core.types import Allocation, SystemParams, Weights
 
 Array = jnp.ndarray
@@ -132,10 +133,12 @@ def _region_solve_impl(sys_batch, warr, init, tol, acc: AccuracyModel,
                        max_iters: int, sp1_method: str, sp2_method: str,
                        sp2_iters: int, mesh: Mesh, lockstep: bool,
                        with_init: bool):
-    fn = _fleet_cell_fn(warr, acc, max_iters, tol, sp1_method, sp2_method,
+    """warr is the (C, 3) per-cell weights stack — a traced, cell-sharded
+    operand, so mixed per-cell weights share this one jit cache entry."""
+    fn = _fleet_cell_fn(acc, max_iters, tol, sp1_method, sp2_method,
                         sp2_iters, with_init)
     vf = jax.vmap(fn)
-    args = (sys_batch, init) if with_init else (sys_batch,)
+    args = (sys_batch, warr, init) if with_init else (sys_batch, warr)
     if lockstep or mesh.devices.size == 1:
         return vf(*args)
     in_specs = tuple(cell_specs(a) for a in args)
@@ -173,32 +176,25 @@ def allocate_region(sys_batch: SystemParams, w: Weights,
                     sp2_iters: int = 30, sp2_method: str = "direct",
                     sp1_method: str = "sweep",
                     lockstep: bool = False) -> RegionResult:
-    """`allocate_fleet` with the cell axis sharded over a device mesh.
+    """Deprecated shim: mesh-sharded fleet solve through `repro.solve`.
 
-    The stacked-cell pytree is placed with `NamedSharding` over `cells`
-    (padding the cell count up to a mesh multiple by replicating the last
-    cell; replicas are sliced off the result). Per-cell outputs are
-    bit-identical to single-device `allocate_fleet` — sharding moves work,
-    not math. `stats` carries the per-shard convergence summary, gathered
-    host-side once, lazily, on first access (the serving hot path never
-    pays the sync).
+    Equivalent to ``solve(Problem(system=sys_batch, weights=w,
+    mesh=mesh or region_mesh(), ...), SolverSpec(lockstep=...))``. Per-cell
+    outputs are bit-identical to the single-device fleet path — sharding
+    moves work, not math — and per-cell weights are a traced, cell-sharded
+    operand (pass a sequence of `Weights` as `Problem.weights`).
     """
-    mesh = mesh if mesh is not None else region_mesh()
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    C = int(jnp.asarray(sys_batch.gain).shape[0])
-    D = int(mesh.devices.size)
-    Cp = -(-C // D) * D
-    sysb = place_cells(pad_cells(sys_batch, Cp), mesh)
-    initb = None if init is None else place_cells(pad_cells(init, Cp), mesh)
-    dtype = jnp.asarray(sysb.gain).dtype
-    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-    out = _region_solve_impl(sysb, warr, initb, jnp.asarray(tol, dtype), acc,
-                             max_iters, sp1_method, sp2_method, sp2_iters,
-                             mesh, lockstep, init is not None)
-    fleet = _slice_fleet(_fleet_result(out, max_iters, dtype), C)
-    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
-                        _n_cells=C, _mesh_devices=int(mesh.devices.size))
+    from repro.api import Problem, SolverSpec, solve
+    from repro.api.solve import _warn_deprecated
+
+    _warn_deprecated("allocate_region",
+                     "Problem(system=sys_batch, weights, mesh=mesh), "
+                     "SolverSpec(lockstep=...)")
+    return solve(Problem(system=sys_batch, weights=w, acc=acc, init=init,
+                         mesh=mesh if mesh is not None else region_mesh()),
+                 SolverSpec(max_iters=max_iters, tol=tol,
+                            sp1_method=sp1_method, sp2_method=sp2_method,
+                            sp2_iters=sp2_iters, lockstep=lockstep))
 
 
 def run_rounds_region(key: jax.Array, sys_batch: SystemParams, w: Weights,
@@ -206,57 +202,41 @@ def run_rounds_region(key: jax.Array, sys_batch: SystemParams, w: Weights,
                       init: Optional[Allocation] = None,
                       mesh: Optional[Mesh] = None,
                       lockstep: bool = False):
-    """`dynamics.run_rounds_fleet` with the cell axis sharded over a mesh.
+    """Deprecated shim: mesh-sharded round dynamics through `repro.solve`.
 
+    Equivalent to ``solve(Problem(system=sys_batch, weights=w, rounds=cfg,
+    key=key, mesh=mesh or region_mesh(), ...), SolverSpec(lockstep=...))``.
     Per-cell key splits match `run_rounds_fleet` (cell c consumes split c of
     `key`; replicated pad cells reuse the last real cell's key and are
     sliced off), so results agree with the single-device engine.
     """
-    from repro.dynamics.config import RoundsResult
-    from repro.dynamics.engine import (_check_simulation_init,
-                                       _init_carry_state, _result)
+    from repro.api import Problem, SolverSpec, solve
+    from repro.api.solve import _warn_deprecated
 
-    mesh = mesh if mesh is not None else region_mesh()
-    acc = acc if acc is not None else default_accuracy()
-    w = w.normalized()
-    _check_simulation_init(cfg, init)
-    C = int(jnp.asarray(sys_batch.gain).shape[0])
-    D = int(mesh.devices.size)
-    Cp = -(-C // D) * D
-    dtype = jnp.asarray(sys_batch.gain).dtype
-    warr = jnp.asarray([w.w1, w.w2, w.rho], dtype)
-    keys = pad_cells(jax.random.split(key, C), Cp)
-    sysb = place_cells(pad_cells(sys_batch, Cp), mesh)
-    keysb = place_cells(keys, mesh)
-    init_state = None if init is None else jax.vmap(_init_carry_state)(
-        sys_batch, init)
-    initb = None if init_state is None else place_cells(
-        pad_cells(init_state, Cp), mesh)
-    out = _region_rounds_impl(sysb, warr, keysb, initb, acc, cfg, mesh,
-                              lockstep, init_state is not None)
-    res = _result(out)
-    cut = lambda x: x[:C]
-    return RoundsResult(
-        allocation=jax.tree_util.tree_map(cut, res.allocation),
-        ledger=cut(res.ledger), staleness=cut(res.staleness),
-        gains=cut(res.gains), resolutions=cut(res.resolutions),
-        columns=res.columns)
+    _warn_deprecated("run_rounds_region",
+                     "Problem(system=sys_batch, weights, rounds=cfg, "
+                     "key=key, mesh=mesh), SolverSpec(lockstep=...)")
+    return solve(Problem(system=sys_batch, weights=w, acc=acc, init=init,
+                         rounds=cfg, key=key,
+                         mesh=mesh if mesh is not None else region_mesh()),
+                 SolverSpec(lockstep=lockstep))
 
 
 @partial(jax.jit, static_argnames=("acc", "cfg", "mesh", "lockstep",
                                    "with_init"))
 def _region_rounds_impl(sys_batch, warr, keys, init_state, acc, cfg,
                         mesh: Mesh, lockstep: bool, with_init: bool):
+    """warr is the (C, 3) per-cell weights stack (traced, cell-sharded)."""
     from repro.dynamics.engine import (_cell_engine, _init_carry_state,
                                        initial_allocation)
 
-    def one(sysc, kc, *st):
+    def one(sysc, warr_c, kc, *st):
         st0 = st[0] if with_init else _init_carry_state(
             sysc, initial_allocation(sysc))
-        return _cell_engine(sysc, warr, acc, kc, st0, cfg)
+        return _cell_engine(sysc, warr_c, acc, kc, st0, cfg)
 
     vf = jax.vmap(one)
-    args = (sys_batch, keys) + ((init_state,) if with_init else ())
+    args = (sys_batch, warr, keys) + ((init_state,) if with_init else ())
     if lockstep or mesh.devices.size == 1:
         return vf(*args)
     in_specs = tuple(cell_specs(a) for a in args)

@@ -13,8 +13,14 @@ shard-ready batches, and returns per-cell results:
   * **warm starts**: an LRU cache keyed by cell identity holds the last
     solution per cell; a re-request of a drifted cell re-solves from it in
     ~2 BCD iterations instead of a cold ~8-25 (PR 3's measurement);
-  * **sharding**: batches run through `allocate_region` on the mesh
-    (shard-local early exit), or plain `allocate_fleet` when `mesh=None`.
+  * **per-request weights**: each `AllocationRequest` may carry its own
+    `Weights` (multi-cell mixed-demand deployments: every cell weighs
+    energy/latency/accuracy differently). Weights are a traced (C, 3)
+    operand of the jitted solve, so mixed weights add ZERO compiled
+    shapes — only `SolverSpec` + the bucket menu key the jit cache;
+  * **sharding**: batches run through `repro.solve` — sharded over the
+    mesh when one is given (shard-local early exit), plain fleet vmap
+    when `mesh=None`.
 
 `stats` tracks requests, cache hits, batches, and the set of compiled batch
 shapes — the acceptance signal for the bucketing policy.
@@ -29,12 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Problem, SolverSpec, solve
 from repro.core.accuracy import AccuracyModel, default_accuracy
-from repro.core.bcd import allocate_fleet, initial_allocation, stack_systems
+from repro.core.bcd import initial_allocation, stack_systems
 from repro.core.types import Allocation, SystemParams, Weights
 
 from .batch import DEFAULT_MIN_BUCKET, bucket_size, pad_allocation, pad_system
-from .mesh import allocate_region
+from .mesh import RegionResult
 
 Array = jnp.ndarray
 
@@ -44,9 +51,11 @@ class AllocationRequest:
     """One cell asking for a (re-)allocation against its current channel
     snapshot. `cell_id` keys the warm-start cache: re-requests of the same
     cell (drifted gains, same device pool) re-solve from the previous
-    solution."""
+    solution. `w`, if set, overrides the allocator's default weights for
+    this request only (traced — never a recompile)."""
     cell_id: Hashable
     sys: SystemParams
+    w: Optional[Weights] = None
 
 
 @dataclasses.dataclass
@@ -65,23 +74,29 @@ class RegionAllocator:
 
     Parameters
     ----------
-    w : objective weights shared by the region (per the paper's operator
-        weighting; per-request weights would fragment the jit cache).
-    mesh : jax mesh to shard batches over (None = single device,
-        `allocate_fleet`); see `region_mesh`.
+    w : the region's *default* objective weights; any request may override
+        them with its own `AllocationRequest.w` (traced per request, zero
+        extra compiles — the PR 4 fragmentation caveat is closed).
+    spec : a `SolverSpec` with the static solver options — the jit-cache
+        key shared by every batch this allocator solves.
+    mesh : jax mesh to shard batches over (None = single-device fleet
+        vmap); see `region_mesh`.
     cells_per_batch : fixed cell-axis length of every compiled solve.
     min_bucket : floor of the power-of-two device-count buckets.
     cache_size : max cells kept in the warm-start LRU.
-    max_iters / tol / solver kwargs : forwarded to the BCD solve.
+    max_iters / tol / sp* kwargs : legacy spellings of the SolverSpec
+        fields, honored when `spec` is not given.
     """
 
     def __init__(self, w: Weights, acc: Optional[AccuracyModel] = None,
                  mesh=None, cells_per_batch: int = 32,
                  min_bucket: int = DEFAULT_MIN_BUCKET,
                  cache_size: int = 4096,
-                 max_iters: int = 20, tol: float = 1e-6,
-                 sp2_iters: int = 30, sp2_method: str = "direct",
-                 sp1_method: str = "sweep"):
+                 spec: Optional[SolverSpec] = None,
+                 max_iters: Optional[int] = None, tol: Optional[float] = None,
+                 sp2_iters: Optional[int] = None,
+                 sp2_method: Optional[str] = None,
+                 sp1_method: Optional[str] = None):
         if cells_per_batch < 1:
             raise ValueError("cells_per_batch must be >= 1")
         self.w = w
@@ -90,9 +105,19 @@ class RegionAllocator:
         self.cells_per_batch = int(cells_per_batch)
         self.min_bucket = int(min_bucket)
         self.cache_size = int(cache_size)
-        self.solver_kw = dict(max_iters=max_iters, tol=tol,
-                              sp2_iters=sp2_iters, sp2_method=sp2_method,
-                              sp1_method=sp1_method)
+        legacy = {k: v for k, v in dict(
+            max_iters=max_iters, tol=tol, sp2_iters=sp2_iters,
+            sp2_method=sp2_method, sp1_method=sp1_method).items()
+            if v is not None}
+        if spec is not None:
+            if legacy:   # silently dropping either set would mislead
+                raise ValueError(
+                    f"RegionAllocator: pass the solver options through "
+                    f"`spec` OR the legacy kwargs, not both (got spec and "
+                    f"{sorted(legacy)})")
+            self.spec = spec
+        else:
+            self.spec = SolverSpec(**legacy)
         # cell_id -> (n_devices, Allocation with (n,) leaves incl. T)
         self._cache: "OrderedDict[Hashable, Tuple[int, Allocation]]" = \
             OrderedDict()
@@ -146,6 +171,7 @@ class RegionAllocator:
         C = self.cells_per_batch
         padded = [pad_system(r.sys, bucket) for r in chunk]
         inits, warm = [], []
+        w_cells = [r.w if r.w is not None else self.w for r in chunk]
         for r, ps in zip(chunk, padded):
             init, hit = self._warm_init(r, ps, bucket)
             if init is None:
@@ -165,15 +191,15 @@ class RegionAllocator:
         while len(padded) < C:
             padded.append(padded[0])
             inits.append(inits[0])
+            w_cells.append(w_cells[0])
         sys_batch = stack_systems(padded)
         init_batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
-        if self.mesh is not None:
-            res = allocate_region(sys_batch, self.w, acc=self.acc,
-                                  mesh=self.mesh, init=init_batch,
-                                  **self.solver_kw).fleet
-        else:
-            res = allocate_fleet(sys_batch, self.w, acc=self.acc,
-                                 init=init_batch, **self.solver_kw)
+        # one solve() per chunk: per-request weights ride along as a traced
+        # (C, 3) operand — the jit-cache key is (spec, topology, bucket) only
+        res = solve(Problem(system=sys_batch, weights=w_cells, acc=self.acc,
+                            init=init_batch, mesh=self.mesh), self.spec)
+        if isinstance(res, RegionResult):
+            res = res.fleet
         self.stats["batches"] += 1
         self.stats["shapes"].add((C, bucket))
         self.stats["cells_padded"] += C - n_real
@@ -207,6 +233,18 @@ class RegionAllocator:
         self._cache.move_to_end(cell_id)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+
+    @property
+    def solver_kw(self):
+        """Legacy read-only view of the solver options (now a `SolverSpec`).
+        A mapping proxy: the old in-place `solver_kw[...] = x` mutation
+        raises instead of silently doing nothing — reconstruct the
+        allocator (or pass `spec=`) to change solver options."""
+        from types import MappingProxyType
+        return MappingProxyType(dict(
+            max_iters=self.spec.max_iters, tol=self.spec.tol,
+            sp2_iters=self.spec.sp2_iters, sp2_method=self.spec.sp2_method,
+            sp1_method=self.spec.sp1_method))
 
     @property
     def compiled_shapes(self) -> set:

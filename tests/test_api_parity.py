@@ -1,0 +1,298 @@
+"""Unified-API acceptance: one `solve(problem, spec)` reproduces every
+legacy entry point bit-identically, per topology, and per-cell traced
+weights match per-cell single solves exactly.
+
+Also covers the SolverSpec construction-time validation (tol vs the
+64-ulp rel-step floor) and the `allocate_fixed_deadline` parity satellite
+(max_iters=0 returns NaN, spec options are honored).
+"""
+import warnings
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import (Problem, SolverSpec, Weights, make_fleet, make_system,
+                   rel_step_floor, solve)
+from repro.api.solve import _reset_deprecation_registry
+from repro.core import allocate, allocate_fixed_deadline, allocate_fleet
+from repro.dynamics import RoundsConfig, run_rounds_fleet
+from repro.region import allocate_region, region_mesh
+
+W = Weights(0.5, 0.5, 1.0)
+
+
+def _shim(fn, *args, **kw):
+    """Call a legacy shim with its DeprecationWarning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+def _tree_equal(a, b) -> bool:
+    eq = jax.tree_util.tree_map(
+        lambda x, y: bool(jnp.all(jnp.asarray(x) == jnp.asarray(y))), a, b)
+    return all(jax.tree_util.tree_leaves(eq))
+
+
+# ---------------------------------------------------------------------------
+# per-topology bit parity
+# ---------------------------------------------------------------------------
+
+def test_solve_matches_allocate_bit_identical():
+    sysp = make_system(jax.random.PRNGKey(0), n_devices=10)
+    old = _shim(allocate, sysp, W, max_iters=6, tol=1e-5)
+    new = solve(Problem(system=sysp, weights=W),
+                SolverSpec(max_iters=6, tol=1e-5))
+    assert _tree_equal(old.allocation, new.allocation)
+    assert old.objective == new.objective
+    assert old.iters == new.iters and old.converged == new.converged
+    assert old.history == new.history
+
+
+def test_solve_matches_allocate_fleet_bit_identical():
+    fleet = make_fleet(jax.random.PRNGKey(1), n_cells=4, n_devices=12)
+    old = _shim(allocate_fleet, fleet, W, max_iters=6)
+    new = solve(Problem(system=fleet, weights=W), SolverSpec(max_iters=6))
+    assert _tree_equal(old.allocation, new.allocation)
+    assert bool(jnp.all(old.objective == new.objective))
+    assert bool(jnp.all(old.iters == new.iters))
+    assert np.array_equal(np.asarray(old.history), np.asarray(new.history),
+                          equal_nan=True)   # rows past iters are NaN-padded
+
+
+def test_solve_matches_allocate_region_bit_identical():
+    fleet = make_fleet(jax.random.PRNGKey(2), n_cells=3, n_devices=12)
+    mesh = region_mesh()
+    old = _shim(allocate_region, fleet, W, mesh=mesh, max_iters=6)
+    new = solve(Problem(system=fleet, weights=W, mesh=mesh),
+                SolverSpec(max_iters=6))
+    assert _tree_equal(old.allocation, new.allocation)
+    assert bool(jnp.all(old.fleet.objective == new.fleet.objective))
+    assert old.stats["cells"] == new.stats["cells"]
+
+
+def test_solve_matches_run_rounds_fleet_bit_identical():
+    fleet = make_fleet(jax.random.PRNGKey(3), n_cells=3, n_devices=10)
+    base = _shim(allocate_fleet, fleet, W, max_iters=6)
+    cfg = RoundsConfig(rounds=3, channel_mode="markov", bcd_iters=2,
+                       participation="stale", dropout_prob=0.05)
+    key = jax.random.PRNGKey(7)
+    old = _shim(run_rounds_fleet, key, fleet, W, cfg, init=base.allocation)
+    new = solve(Problem(system=fleet, weights=W, rounds=cfg, key=key,
+                        init=base.allocation))
+    assert bool(jnp.all(old.ledger == new.ledger))
+    assert bool(jnp.all(old.staleness == new.staleness))
+    assert _tree_equal(old.allocation, new.allocation)
+
+
+def test_solve_matches_fixed_deadline_bit_identical():
+    sysp = make_system(jax.random.PRNGKey(4), n_devices=8)
+    w = Weights(0.99, 0.01, 1.0)
+    old = _shim(allocate_fixed_deadline, sysp, w, 120.0, max_iters=6)
+    new = solve(Problem(system=sysp, weights=w, deadline=120.0),
+                SolverSpec(max_iters=6))
+    assert _tree_equal(old.allocation, new.allocation)
+    assert old.objective == new.objective
+    assert old.history == new.history
+
+
+# ---------------------------------------------------------------------------
+# per-cell traced weights: the PR 4 fragmentation caveat, closed
+# ---------------------------------------------------------------------------
+
+def test_per_cell_weights_match_per_cell_single_solves():
+    """A (C, 3) weights stack solves each cell exactly as a single-cell
+    solve with that cell's weights — weights are data, not config."""
+    fleet = make_fleet(jax.random.PRNGKey(5), n_cells=3, n_devices=12)
+    ws = [Weights(0.9, 0.1, 1.0), Weights(0.5, 0.5, 10.0),
+          Weights(0.1, 0.9, 30.0)]
+    mixed = solve(Problem(system=fleet, weights=ws), SolverSpec(max_iters=6))
+    for c, wc in enumerate(ws):
+        cell = jax.tree_util.tree_map(lambda x: x[c], fleet)
+        single = solve(Problem(system=cell, weights=wc),
+                       SolverSpec(max_iters=6))
+        assert bool(jnp.all(
+            mixed.allocation.bandwidth[c] == single.allocation.bandwidth))
+        assert bool(jnp.all(
+            mixed.allocation.power[c] == single.allocation.power))
+        assert bool(jnp.all(
+            mixed.allocation.resolution[c] == single.allocation.resolution))
+        assert int(mixed.iters[c]) == single.iters
+
+
+def test_broadcast_weights_match_shared_weights():
+    """Scalar weights broadcast to (C, 3) solve identically to the legacy
+    shared-weights path (same compiled program, same values)."""
+    fleet = make_fleet(jax.random.PRNGKey(6), n_cells=3, n_devices=10)
+    shared = solve(Problem(system=fleet, weights=W), SolverSpec(max_iters=5))
+    listed = solve(Problem(system=fleet, weights=[W, W, W]),
+                   SolverSpec(max_iters=5))
+    assert _tree_equal(shared.allocation, listed.allocation)
+
+
+def test_weights_array_forms_agree():
+    """Raw (3,) arrays and Weights normalize to the same solve."""
+    sysp = make_system(jax.random.PRNGKey(8), n_devices=8)
+    a = solve(Problem(system=sysp, weights=Weights(1.0, 1.0, 2.0)),
+              SolverSpec(max_iters=5))
+    b = solve(Problem(system=sysp, weights=jnp.asarray([1.0, 1.0, 2.0])),
+              SolverSpec(max_iters=5))
+    assert a.objective == pytest.approx(b.objective, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fixed-deadline satellite: SolverSpec path + max_iters=0 regression
+# ---------------------------------------------------------------------------
+
+def test_fixed_deadline_zero_iters_nan_through_solve():
+    """max_iters=0 returns the untouched init with a NaN objective (the
+    PR 1 IndexError regression), now through the unified path."""
+    sysp = make_system(jax.random.PRNGKey(9), n_devices=4)
+    res = solve(Problem(system=sysp, weights=Weights(0.99, 0.01, 1.0),
+                        deadline=100.0), SolverSpec(max_iters=0))
+    assert res.iters == 0
+    assert res.history == []
+    assert np.isnan(res.objective)
+    assert res.allocation.bandwidth.shape == (4,)
+
+
+def test_fixed_deadline_accepts_spec_options():
+    """The deadline variant rides the same SolverSpec path: warm-start
+    init and keep_history are honored (the old signature lacked them)."""
+    sysp = make_system(jax.random.PRNGKey(10), n_devices=6)
+    w = Weights(0.99, 0.01, 0.0)
+    cold = solve(Problem(system=sysp, weights=w, deadline=150.0),
+                 SolverSpec(max_iters=8))
+    warm = solve(Problem(system=sysp, weights=w, deadline=150.0,
+                         init=cold.allocation), SolverSpec(max_iters=8))
+    assert warm.iters <= cold.iters
+    quiet = solve(Problem(system=sysp, weights=w, deadline=150.0),
+                  SolverSpec(max_iters=8, keep_history=False))
+    assert quiet.history == []
+    assert quiet.objective == pytest.approx(cold.objective, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# SolverSpec construction validation (tol floor satellite)
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_tol_below_explicit_dtype_floor():
+    floor = rel_step_floor(np.float32)
+    with pytest.raises(ValueError, match="64 ulps"):
+        SolverSpec(tol=floor / 2, dtype="float32")
+    # the same tol is fine under f64
+    SolverSpec(tol=floor / 2, dtype="float64")
+
+
+def test_spec_rejects_tol_below_any_floor():
+    with pytest.raises(ValueError, match="float64 rel-step floor"):
+        SolverSpec(tol=1e-16)
+
+
+def test_solve_warns_once_when_tol_below_resolved_floor():
+    from repro.api.spec import _TOL_WARNED
+
+    sysp = make_system(jax.random.PRNGKey(11), n_devices=4)
+    sys32 = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x).astype(jnp.float32)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x, sysp)
+    _TOL_WARNED.clear()
+    spec = SolverSpec(max_iters=1, tol=2e-6)   # chosen, below the f32 floor
+    with pytest.warns(UserWarning, match="rel-step floor"):
+        solve(Problem(system=sys32, weights=W), spec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)   # second call: silent
+        solve(Problem(system=sys32, weights=W), spec)
+        # the library DEFAULT tol is exempt (floor-or-1e-6 semantics):
+        # a default-configured f32 solve must not warn about a tolerance
+        # the user never chose
+        solve(Problem(system=sys32, weights=W), SolverSpec(max_iters=1))
+
+
+def test_weights_leaf_rejects_nonpositive_raw_arrays():
+    """Raw arrays share the Weights.normalized() contract: w1 + w2 <= 0
+    raises instead of silently normalizing to inf/NaN."""
+    from repro import weights_leaf
+    with pytest.raises(ValueError, match="must be positive"):
+        weights_leaf(jnp.asarray([0.0, 0.0, 1.0]), jnp.float64)
+    with pytest.raises(ValueError, match="must be positive"):
+        weights_leaf(jnp.asarray([[0.5, 0.5, 1.0], [-1.0, 0.5, 1.0]]),
+                     jnp.float64, cells=2)
+
+
+def test_region_allocator_rejects_spec_plus_legacy_kwargs():
+    from repro import RegionAllocator
+    with pytest.raises(ValueError, match="not both"):
+        RegionAllocator(W, spec=SolverSpec(), tol=1e-3)
+    # either form alone is fine
+    RegionAllocator(W, spec=SolverSpec(tol=1e-3))
+    RegionAllocator(W, tol=1e-3, max_iters=5)
+
+
+def test_spec_validates_methods_and_iters():
+    with pytest.raises(ValueError, match="sp1_method"):
+        SolverSpec(sp1_method="newton")
+    with pytest.raises(ValueError, match="sp2_method"):
+        SolverSpec(sp2_method="cvx")
+    with pytest.raises(ValueError, match="max_iters"):
+        SolverSpec(max_iters=-1)
+    with pytest.raises(ValueError, match="dtype"):
+        SolverSpec(dtype="bfloat16")
+
+
+def test_spec_is_hashable_and_comparable():
+    a = SolverSpec(max_iters=8, tol=1e-4)
+    b = SolverSpec(max_iters=8, tol=1e-4)
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b, SolverSpec()}) == 2
+
+
+def test_spec_dtype_policy_casts_the_solve():
+    sysp = make_system(jax.random.PRNGKey(12), n_devices=6)
+    res32 = solve(Problem(system=sysp, weights=W),
+                  SolverSpec(max_iters=4, tol=1e-4, dtype="float32"))
+    assert res32.allocation.bandwidth.dtype == jnp.float32
+    res64 = solve(Problem(system=sysp, weights=W),
+                  SolverSpec(max_iters=4, tol=1e-4, dtype="float64"))
+    assert res64.allocation.bandwidth.dtype == jnp.float64
+
+
+# ---------------------------------------------------------------------------
+# dispatcher routing errors
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_rejects_bad_combinations():
+    sysp = make_system(jax.random.PRNGKey(13), n_devices=4)
+    fleet = make_fleet(jax.random.PRNGKey(13), n_cells=2, n_devices=4)
+    with pytest.raises(ValueError, match="needs problem.key"):
+        solve(Problem(system=sysp, weights=W, rounds=RoundsConfig(rounds=2)))
+    with pytest.raises(ValueError, match="stacked"):
+        solve(Problem(system=sysp, weights=W, mesh=region_mesh()))
+    with pytest.raises(NotImplementedError, match="single-cell"):
+        solve(Problem(system=fleet, weights=W, deadline=100.0))
+    with pytest.raises(ValueError, match="cell axis"):
+        solve(Problem(system=sysp, weights=[W, W]))
+    # a tuned spec on a rounds problem would be silently ignored — reject
+    with pytest.raises(ValueError, match="RoundsConfig"):
+        solve(Problem(system=sysp, weights=W, rounds=RoundsConfig(rounds=2),
+                      key=jax.random.PRNGKey(0)), SolverSpec(max_iters=3))
+    # lockstep picks the mesh execution mode; meshless it would no-op
+    with pytest.raises(ValueError, match="lockstep"):
+        solve(Problem(system=fleet, weights=W), SolverSpec(lockstep=True))
+
+
+def test_deprecation_warns_exactly_once_per_shim():
+    sysp = make_system(jax.random.PRNGKey(14), n_devices=4)
+    _reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        allocate(sysp, W, max_iters=1)
+        allocate(sysp, W, max_iters=1)
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)
+           and "allocate()" in str(r.message)]
+    assert len(dep) == 1

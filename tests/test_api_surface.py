@@ -1,0 +1,93 @@
+"""Public-API surface snapshot: `repro.__all__` is pinned, the unified
+entry point is importable from the top level, and every legacy shim fires
+its DeprecationWarning exactly once per process.
+
+Signature drift (adding/removing/renaming public names) must break THIS
+test, not downstream users.
+"""
+import warnings
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+import repro
+from repro import Problem, SolverSpec, Weights, make_fleet, make_system
+from repro.api.solve import _reset_deprecation_registry
+from repro.dynamics import RoundsConfig
+
+# the pinned surface — update deliberately, with a migration note
+EXPECTED_ALL = {
+    # unified API
+    "Problem", "SolverSpec", "TolFloorWarning", "WeightsLike",
+    "rel_step_floor", "solve", "weights_leaf",
+    # core types + builders
+    "AccuracyModel", "Allocation", "BCDResult", "FleetResult",
+    "SystemParams", "Weights", "default_accuracy", "make_fleet",
+    "make_system", "stack_systems",
+    # dynamics / region
+    "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
+    "RegionAllocator", "RegionResult", "region_mesh",
+    # legacy shims (deprecated)
+    "allocate", "allocate_fixed_deadline", "allocate_fleet",
+    "allocate_region", "run_rounds", "run_rounds_fleet",
+    "run_rounds_region",
+}
+
+
+def test_top_level_all_snapshot():
+    assert set(repro.__all__) == EXPECTED_ALL
+    for name in repro.__all__:
+        assert getattr(repro, name, None) is not None, name
+
+
+def test_core_all_still_exports_legacy_names():
+    from repro import core
+    for name in ("allocate", "allocate_fixed_deadline", "allocate_fleet",
+                 "stack_systems", "Weights", "SystemParams"):
+        assert name in core.__all__
+
+
+@pytest.mark.parametrize("call", [
+    "allocate", "allocate_fleet", "allocate_fixed_deadline", "run_rounds",
+])
+def test_each_shim_warns_exactly_once(call):
+    key = jax.random.PRNGKey(0)
+    sysp = make_system(key, n_devices=4)
+    fleet = make_fleet(key, n_cells=2, n_devices=4)
+    w = Weights(0.5, 0.5, 1.0)
+
+    def invoke():
+        if call == "allocate":
+            repro.allocate(sysp, w, max_iters=0)
+        elif call == "allocate_fleet":
+            repro.allocate_fleet(fleet, w, max_iters=0)
+        elif call == "allocate_fixed_deadline":
+            repro.allocate_fixed_deadline(sysp, w, 100.0, max_iters=0)
+        else:
+            repro.run_rounds(key, sysp, w, RoundsConfig(rounds=1),
+                             init=repro.solve(
+                                 Problem(system=sysp, weights=w),
+                                 SolverSpec(max_iters=2)).allocation)
+
+    _reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        invoke()
+        invoke()
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)
+           and f"{call}()" in str(r.message)]
+    assert len(dep) == 1, f"{call}: {len(dep)} warnings"
+    assert "repro.solve" in str(dep[0].message)
+
+
+def test_solve_itself_never_warns_deprecation():
+    sysp = make_system(jax.random.PRNGKey(1), n_devices=4)
+    _reset_deprecation_registry()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        repro.solve(Problem(system=sysp, weights=Weights(0.5, 0.5, 1.0)),
+                    SolverSpec(max_iters=2, tol=1e-4))
+    assert not [r for r in rec if issubclass(r.category, DeprecationWarning)]
