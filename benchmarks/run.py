@@ -372,6 +372,220 @@ def rounds_dynamics():
          f"mean_bcd_iters={iters_mean['cold']:.2f}")
 
 
+def serve_latency():
+    """Pipelined region serving acceptance: p50/p99 request latency and
+    sustained req/s on a 256-request mixed-size trace (4 device buckets ->
+    <= 4 compiled shapes), under Poisson and bursty arrivals.
+
+    `sync` replays the trace through the pre-pipeline monolith loop (the
+    PR 4-5 `RegionAllocator._solve_chunk`, reconstructed below verbatim):
+    eager jnp padding/stacking enqueued on the device stream, one blocking
+    solve per chunk, then a per-cell jnp-slice gather — host assembly and
+    device compute strictly serialized. `pipelined` is the four-layer
+    `RegionPipeline` at depth 2: numpy host assembly, async dispatch,
+    double-buffered batches, one deferred numpy gather per batch. The
+    acceptance gate is pipelined >= 1.3x the sync req/s on the Poisson
+    trace (checked by compare.py --strict via the speedup_vs_sync field).
+
+    Arrival offsets span half the pipelined serial drain wall, so both
+    paths run saturated and the sustained rate reflects each path's
+    capacity; request latency = completion - arrival. All cell ids are
+    unique (every solve cold) so both paths do identical device work."""
+    import numpy as np
+
+    from repro.core.bcd import initial_allocation, stack_systems
+    from repro.core.types import Allocation
+    from repro.region import AllocationRequest, MaxWait, RegionPipeline
+    from repro.region.batch import bucket_size, pad_allocation, pad_system
+
+    n_req, cells_per_batch, min_bucket = 256, 16, 16
+    spec = SolverSpec(max_iters=8, tol=1e-4)
+    w = Weights(0.5, 0.5, 1.0)
+    # paper-scale cells (~N=50 pools): buckets 16, 32, 64, 128
+    sizes = [12, 24, 48, 90]
+    key = jax.random.PRNGKey(61)
+    systems = [make_system(jax.random.fold_in(key, i),
+                           n_devices=sizes[i % len(sizes)])
+               for i in range(n_req)]
+
+    def pipe(depth):
+        return RegionPipeline(w, cells_per_batch=cells_per_batch,
+                              min_bucket=min_bucket, spec=spec,
+                              policy=MaxWait(0.05), max_in_flight=depth)
+
+    def trace():
+        return [AllocationRequest(cell_id=i, sys=systems[i])
+                for i in range(n_req)]
+
+    # ---------------- the PR 4-5 synchronous monolith, reconstructed ----
+    class _LegacyAllocator:
+        """The pre-pipeline `RegionAllocator` chunk loop: eager jnp
+        assembly, blocking solve, immediate per-cell jnp-slice gather."""
+
+        def __init__(self):
+            self._cache = {}
+            self.shapes = set()
+
+        def solve_chunk(self, chunk, bucket):
+            C = cells_per_batch
+            padded = [pad_system(r.sys, bucket) for r in chunk]
+            inits = []
+            for r, ps in zip(chunk, padded):
+                got = self._cache.get(r.cell_id)
+                init = pad_allocation(got[1], bucket, ps) \
+                    if got is not None and got[0] == r.sys.n \
+                    else initial_allocation(ps)
+                if init.s_relaxed is None or init.T is None:
+                    dt = jnp.asarray(init.bandwidth).dtype
+                    init = Allocation(
+                        bandwidth=init.bandwidth, power=init.power,
+                        freq=init.freq, resolution=init.resolution,
+                        s_relaxed=init.resolution if init.s_relaxed is None
+                        else init.s_relaxed,
+                        T=jnp.zeros((), dt) if init.T is None else init.T)
+                inits.append(init)
+            n_real = len(chunk)
+            while len(padded) < C:   # short chunks replicated cell 0
+                padded.append(padded[0])
+                inits.append(inits[0])
+            sys_batch = stack_systems(padded)
+            init_batch = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *inits)
+            res = solve(Problem(system=sys_batch, weights=[w] * C,
+                                init=init_batch), spec)
+            self.shapes.add((C, bucket))
+            objs = np.asarray(res.objective[:n_real])
+            for c, r in enumerate(chunk):
+                n = r.sys.n
+                a = res.allocation
+                alloc = Allocation(
+                    bandwidth=a.bandwidth[c, :n], power=a.power[c, :n],
+                    freq=a.freq[c, :n], resolution=a.resolution[c, :n],
+                    s_relaxed=None if a.s_relaxed is None
+                    else a.s_relaxed[c, :n],
+                    T=None if a.T is None else a.T[c])
+                self._cache[r.cell_id] = (n, alloc)
+                float(objs[c])   # the old CellResponse sync point
+
+    # compile the bucket menu for BOTH paths once, outside every timed
+    # replay: the first 4 * cells_per_batch requests cover all four
+    # buckets exactly. The paths do NOT share compiled programs — the
+    # monolith's eager-jnp operands carry weak_type leaves (python-float
+    # scalars), the planner's numpy operands are strong-typed, and the
+    # jit cache keys on weak_type.
+    warm = pipe(1)
+    for r in trace()[:4 * cells_per_batch]:
+        warm.submit(r)
+    warm.drain()
+    warm_legacy = _LegacyAllocator()
+    by_bucket = {}
+    for r in trace()[:4 * cells_per_batch]:
+        by_bucket.setdefault(bucket_size(r.sys.n, min_bucket), []).append(r)
+    for b, chunk in sorted(by_bucket.items()):
+        warm_legacy.solve_chunk(chunk, b)
+
+    def replay_sync(arrivals):
+        alloc = _LegacyAllocator()
+        reqs = trace()
+        done_t = np.full(n_req, np.nan)
+        queues = {}
+        i, completed = 0, 0
+        t0 = time.monotonic()
+        while completed < n_req:
+            now = time.monotonic() - t0
+            while i < n_req and arrivals[i] <= now:
+                b = bucket_size(reqs[i].sys.n, min_bucket)
+                queues.setdefault(b, []).append((i, reqs[i]))
+                i += 1
+            full = [b for b, q in queues.items()
+                    if len(q) >= cells_per_batch]
+            if full:
+                b = full[0]
+            elif i >= n_req and any(queues.values()):
+                # end of trace: flush leftovers, still one chunk at a time
+                b = max(queues, key=lambda k: len(queues[k]))
+            else:
+                time.sleep(5e-4)   # idle until the next arrival is due
+                continue
+            batch = queues[b][:cells_per_batch]
+            queues[b] = queues[b][cells_per_batch:]
+            alloc.solve_chunk([r for _, r in batch], b)
+            stamp = time.monotonic() - t0
+            for k, _ in batch:
+                done_t[k] = stamp
+            completed += len(batch)
+        lat = done_t - np.asarray(arrivals)
+        wall = float(np.max(done_t))
+        assert len(alloc.shapes) <= 4, alloc.shapes
+        return dict(p50=float(np.percentile(lat, 50)),
+                    p99=float(np.percentile(lat, 99)),
+                    req_s=n_req / wall, wall=wall)
+
+    def replay(arrivals, depth):
+        p = pipe(depth)
+        reqs = trace()
+        futs = [None] * n_req
+        done_t = np.full(n_req, np.nan)
+        open_idx = set(range(n_req))
+        i = 0
+        t0 = time.monotonic()
+        while open_idx:
+            now = time.monotonic() - t0
+            n_new = 0
+            while i < n_req and arrivals[i] <= now:
+                futs[i] = p.submit(reqs[i])
+                i += 1
+                n_new += 1
+            p.pump(force=(i >= n_req))
+            if i >= n_req and p.in_flight:
+                # no more arrivals: block on the oldest open future so
+                # completions keep getting per-batch timestamps
+                j = min(k for k in open_idx if futs[k].dispatched)
+                futs[j].result()
+            stamp = time.monotonic() - t0
+            resolved = [k for k in open_idx
+                        if futs[k] is not None and futs[k].done()]
+            for k in resolved:
+                done_t[k] = stamp
+                open_idx.discard(k)
+            if not resolved and not n_new and i < n_req:
+                time.sleep(5e-4)   # idle until the next arrival is due
+        lat = done_t - np.asarray(arrivals)
+        wall = float(np.max(done_t))
+        assert len(p.compiled_shapes) <= 4, p.compiled_shapes
+        return dict(p50=float(np.percentile(lat, 50)),
+                    p99=float(np.percentile(lat, 99)),
+                    req_s=n_req / wall, wall=wall)
+
+    # the pipelined drain wall calibrates the arrival span: arrivals must
+    # outpace the FASTER path so both replays measure capacity, not the
+    # arrival rate
+    t0 = time.monotonic()
+    replay(np.zeros(n_req), 2)
+    span = 0.5 * (time.monotonic() - t0)
+
+    rng = np.random.RandomState(3)
+    ia = rng.exponential(1.0, n_req)
+    arrivals = dict(
+        poisson=np.cumsum(ia) * (span / np.sum(ia)),
+        bursty=np.repeat(np.arange(8), n_req // 8) * (span / 8))
+
+    for trace_name, arr in arrivals.items():
+        out_sync = replay_sync(arr)
+        out_pipe = replay(arr, 2)
+        for tag, out in (("sync", out_sync), ("pipelined", out_pipe)):
+            extra = ""
+            if tag == "pipelined":
+                speedup = out["req_s"] / out_sync["req_s"]
+                extra = f";speedup_vs_sync={speedup:.2f}x"
+            t0 = time.time()
+            _row(f"serve_latency.{trace_name}.{tag}.R{n_req}",
+                 t0, t0 + out["wall"],
+                 f"p50_ms={1e3 * out['p50']:.0f};"
+                 f"p99_ms={1e3 * out['p99']:.0f};"
+                 f"req_s={out['req_s']:.1f}{extra}")
+
+
 def sp1_sweep_scale():
     """SP1 engines head-to-head: the batched T-grid dual sweep vs the nested
     56x56 bisection oracle, one solve at region scale (per-iteration SP1 cost
@@ -471,6 +685,7 @@ BENCHES = {
     "fleet": fleet_scale,
     "region": region_scale,
     "rounds": rounds_dynamics,
+    "serve_latency": serve_latency,
     "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,
     "roofline": roofline_table,

@@ -62,8 +62,10 @@ from repro.core import (AccuracyModel, Allocation, BCDResult, FleetResult,
                         stack_systems)
 from repro.dynamics import (RoundsConfig, RoundsResult, run_rounds,
                             run_rounds_fleet)
-from repro.region import (AllocationRequest, CellResponse, RegionAllocator,
-                          RegionResult, allocate_region, region_mesh,
+from repro.region import (AllocationRequest, CellResponse, CloseOnFull,
+                          DeadlineSlack, MaxWait, PendingResponse,
+                          RegionAllocator, RegionPipeline, RegionResult,
+                          StageClocks, allocate_region, region_mesh,
                           run_rounds_region)
 
 __all__ = [
@@ -77,6 +79,9 @@ __all__ = [
     # dynamics / region
     "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
     "RegionAllocator", "RegionResult", "region_mesh",
+    # region serving pipeline (admission policies + async futures)
+    "RegionPipeline", "PendingResponse", "StageClocks",
+    "CloseOnFull", "MaxWait", "DeadlineSlack",
     # legacy shims (deprecated; see the migration table above)
     "allocate", "allocate_fixed_deadline", "allocate_fleet",
     "allocate_region", "run_rounds", "run_rounds_fleet",

@@ -24,6 +24,7 @@ from typing import Any, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.accuracy import AccuracyModel
 from repro.core.types import Allocation, SystemParams, Weights
@@ -44,13 +45,26 @@ def weights_leaf(w: WeightsLike, dtype, cells: Optional[int] = None) -> Array:
     float64, exactly as the legacy entry points did — bit-parity); raw
     arrays are normalized along their last axis.
     """
+    # the two Weights branches assemble host floats — build them in numpy:
+    # an eager jnp.stack here is a device computation that, on the region
+    # serving hot path, queues behind (and blocks on) an in-flight batch
+    # solve. Falls back to jnp when a field is already device-resident
+    # (e.g. traced (C,) fields).
     if isinstance(w, Weights):
         w = w.normalized()
-        arr = jnp.stack([jnp.asarray(w.w1, dtype), jnp.asarray(w.w2, dtype),
-                         jnp.asarray(w.rho, dtype)], axis=-1)
+        try:
+            arr = np.stack([np.asarray(w.w1, dtype), np.asarray(w.w2, dtype),
+                            np.asarray(w.rho, dtype)], axis=-1)
+        except (TypeError, jax.errors.TracerArrayConversionError):
+            arr = jnp.stack([jnp.asarray(w.w1, dtype),
+                             jnp.asarray(w.w2, dtype),
+                             jnp.asarray(w.rho, dtype)], axis=-1)
     elif isinstance(w, (list, tuple)) and w and isinstance(w[0], Weights):
         rows = [wc.normalized() for wc in w]
-        arr = jnp.asarray([[wc.w1, wc.w2, wc.rho] for wc in rows], dtype)
+        try:
+            arr = np.asarray([[wc.w1, wc.w2, wc.rho] for wc in rows], dtype)
+        except (TypeError, jax.errors.TracerArrayConversionError):
+            arr = jnp.asarray([[wc.w1, wc.w2, wc.rho] for wc in rows], dtype)
     else:
         arr = jnp.asarray(w, dtype)
         if arr.ndim == 0 or arr.shape[-1] != 3:
@@ -75,7 +89,9 @@ def weights_leaf(w: WeightsLike, dtype, cells: Optional[int] = None) -> Array:
                 f"cell axis ({arr.shape})")
         return arr
     if arr.ndim == 1:
-        return jnp.broadcast_to(arr, (cells, 3))
+        # follow arr's namespace: a host-assembled row stays host-side
+        xp = np if isinstance(arr, np.ndarray) else jnp
+        return xp.broadcast_to(arr, (cells, 3))
     if arr.shape[0] != cells:
         raise ValueError(
             f"weights_leaf: {arr.shape[0]} weight rows for {cells} cells")

@@ -11,7 +11,9 @@ code path that routes on `Problem` topology:
     (C, N) stack       -> fleet vmap (`FleetResult`)
     + mesh             -> region shard_map (`RegionResult`)
     + rounds config    -> round-dynamics scan (`RoundsResult`)
-    + deadline         -> deadline-constrained BCD (`BCDResult`)
+    + deadline         -> deadline-constrained BCD (`BCDResult`; on a
+                          (C, N) stack a fleet vmap with per-cell
+                          deadlines -> `FleetResult`)
 
 Weights enter the jitted solvers as a traced ``(3,)`` / ``(C, 3)`` operand
 (`api.problem.weights_leaf`), so per-cell / per-request weights cost zero
@@ -133,10 +135,12 @@ def solve(problem: Problem, spec: Optional[SolverSpec] = None):
             return _solve_rounds(problem, spec, sysp, init)
         return _solve_rounds_fleet(problem, spec, sysp, init)
     if problem.deadline is not None:
-        if cells is not None or problem.mesh is not None:
+        if problem.mesh is not None:
             raise NotImplementedError(
-                "solve: the deadline-constrained variant is single-cell "
-                "(stack/mesh support is open)")
+                "solve: the deadline-constrained variant does not shard "
+                "over a mesh yet (single-cell and stacked fleets only)")
+        if cells is not None:
+            return _solve_fixed_fleet(problem, spec, sysp, init)
         return _solve_fixed(problem, spec, sysp, init)
     if problem.mesh is not None:
         if cells is None:
@@ -201,6 +205,38 @@ def _solve_fixed(p: Problem, spec: SolverSpec, sysp, init) -> BCDResult:
         spec.max_iters, spec.tol, spec.sp2_method, spec.sp2_iters)
     return _bcd_result(out, alloc0, spec, _FIXED_COLS, "energy",
                        with_s_relaxed=False)
+
+
+def _solve_fixed_fleet(p: Problem, spec: SolverSpec, sysp, init):
+    """Deadline-constrained BCD vmapped over a stacked (C, N) fleet.
+
+    `Problem.deadline` may be a scalar (one total budget for every cell)
+    or a (C,) array of per-cell budgets; either way the per-round deadline
+    T_total / global_rounds enters the compiled solve as a traced per-cell
+    operand — heterogeneous deadlines never recompile. Returns a
+    `FleetResult` with the fixed-variant ledger columns (col 0 "energy" is
+    the per-cell objective, matching the single-cell path)."""
+    from repro.core.bcd import _FIXED_COLS, _fleet_fixed_cell_fn
+
+    acc = p.acc if p.acc is not None else default_accuracy()
+    dtype = jnp.asarray(sysp.gain).dtype
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    warr = weights_leaf(p.weights, dtype, cells=C)
+    deadline = jnp.asarray(p.deadline, dtype)
+    if deadline.ndim not in (0, 1) or (deadline.ndim == 1
+                                       and deadline.shape[0] != C):
+        raise ValueError(
+            f"solve: deadline must be a scalar or a ({C},) per-cell "
+            f"array, got shape {deadline.shape}")
+    T_round = jnp.broadcast_to(deadline, (C,)) \
+        / jnp.asarray(sysp.global_rounds, dtype)
+    alloc0 = init if init is not None else jax.vmap(
+        lambda sysc: initial_allocation(
+            sysc, bandwidth_frac=p.bandwidth_frac))(sysp)
+    fn = _fleet_fixed_cell_fn(acc, spec.max_iters, spec.tol,
+                              spec.sp2_method, spec.sp2_iters)
+    out = jax.vmap(fn)(sysp, warr, T_round, alloc0)
+    return _fleet_result(out, spec.max_iters, dtype, cols=_FIXED_COLS)
 
 
 def _solve_fleet(p: Problem, spec: SolverSpec, sysp, init):

@@ -70,26 +70,36 @@ class FleetResult:
 
 
 def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
-                       bandwidth_frac: float = 1.0) -> Allocation:
+                       bandwidth_frac: float = 1.0, xp=jnp) -> Allocation:
     """Feasible start: p = pmax, B = B/N (paper init; Fig. 9 uses B/(2N)).
 
     On a padded system (`sys.active` set) the bandwidth split divides by the
     ACTIVE device count and pad lanes start at B = 0, so the active prefix
     of a padded solve starts (and therefore iterates) bit-identically to the
-    unpadded one."""
+    unpadded one.
+
+    `xp` picks the array namespace (default jnp). The region planning
+    layer passes numpy so the init is assembled host-side without touching
+    the device stream — full/where/one scalar divide are IEEE-exact
+    elementwise ops, so both namespaces are bit-identical."""
     n = sys.n
     if sys.active is None:
-        bw = jnp.full((n,), sys.bandwidth_total / n * bandwidth_frac)
+        bw = xp.full((n,), sys.bandwidth_total / n * bandwidth_frac)
     else:
-        n_eff = jnp.sum(sys.active.astype(jnp.asarray(sys.gain).dtype))
-        share = sys.bandwidth_total / n_eff * bandwidth_frac
-        bw = jnp.where(sys.active, share,
-                       jnp.zeros((), jnp.asarray(share).dtype))
+        n_eff = xp.sum(xp.asarray(sys.active).astype(
+            xp.asarray(sys.gain).dtype))
+        # n_eff == 0 (all-inactive filler cell) divides to inf, masked to
+        # 0 by the where below — identical in both namespaces, but numpy
+        # warns where jnp is silent
+        with np.errstate(divide="ignore"):
+            share = sys.bandwidth_total / n_eff * bandwidth_frac
+        bw = xp.where(sys.active, share,
+                      xp.zeros((), xp.asarray(share).dtype))
     return Allocation(
         bandwidth=bw,
-        power=jnp.full((n,), sys.p_max),
-        freq=jnp.full((n,), sys.f_max),
-        resolution=jnp.full((n,), sys.s_lo),
+        power=xp.full((n,), sys.p_max),
+        freq=xp.full((n,), sys.f_max),
+        resolution=xp.full((n,), sys.s_lo),
     )
 
 
@@ -330,7 +340,7 @@ def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
 # C independent base-station cells — the ROADMAP path to millions of clients.
 # ----------------------------------------------------------------------------
 
-def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
+def stack_systems(systems: Sequence[SystemParams], xp=jnp) -> SystemParams:
     """Stack per-cell SystemParams into one batched pytree: per-device arrays
     become (C, N), per-cell scalars become (C,). Cells may differ in any
     numeric scalar (bandwidth_total, p_max, ... are traced leaves), so mixed
@@ -349,10 +359,10 @@ def stack_systems(systems: Sequence[SystemParams]) -> SystemParams:
                 "stack_systems: cells differ in static config (resolutions)")
     if any(s_.active is not None for s_ in systems):
         systems = [s_ if s_.active is not None else
-                   s_.replace(active=jnp.ones(jnp.asarray(s_.gain).shape,
-                                              bool))
+                   s_.replace(active=xp.ones(xp.asarray(s_.gain).shape,
+                                             bool))
                    for s_ in systems]
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *systems)
+    return jax.tree_util.tree_map(lambda *xs: xp.stack(xs), *systems)
 
 
 def _fleet_cell_fn(acc, max_iters, tol, sp1_method, sp2_method,
@@ -373,9 +383,25 @@ def _fleet_cell_fn(acc, max_iters, tol, sp1_method, sp2_method,
                                      initial_allocation(sysc))
 
 
-def _fleet_result(out, max_iters: int, dtype) -> FleetResult:
-    """Assemble a FleetResult from the stacked raw `_allocate_impl` outputs
-    (all leaves carry a leading cell axis)."""
+def _fleet_fixed_cell_fn(acc, max_iters, tol, sp2_method, sp2_iters):
+    """Per-cell deadline-constrained solver closure for the fleet vmap
+    (`api.solve._solve_fixed_fleet`): the fixed-T sibling of
+    `_fleet_cell_fn`. The per-round deadline rides as a vmapped per-cell
+    scalar operand, so heterogeneous deadlines (or heterogeneous
+    `global_rounds`) share one compiled program."""
+    def fn(sysc, warr_c, T_round_c, alloc0):
+        state0 = _init_carry_state(sysc, alloc0)
+        return _allocate_fixed_impl(sysc, warr_c, acc, T_round_c, state0,
+                                    max_iters, tol, sp2_method, sp2_iters)
+    return fn
+
+
+def _fleet_result(out, max_iters: int, dtype,
+                  cols: Sequence[str] = _LEDGER_COLS) -> FleetResult:
+    """Assemble a FleetResult from the stacked raw `_allocate_impl` (or
+    `_allocate_fixed_impl`, with cols=_FIXED_COLS) outputs — all leaves
+    carry a leading cell axis. Ledger column 0 is the per-iteration
+    objective for both column sets ("objective" free / "energy" fixed)."""
     B, p, f, s, s_hat, T, iters, conv, ledger = out
     if max_iters > 0:
         idx = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
@@ -384,9 +410,11 @@ def _fleet_result(out, max_iters: int, dtype) -> FleetResult:
     else:
         objective = jnp.full(iters.shape, jnp.nan, dtype)
     allocation = Allocation(bandwidth=B, power=p, freq=f, resolution=s,
-                            s_relaxed=s_hat, T=T)
+                            s_relaxed=s_hat if cols is _LEDGER_COLS else None,
+                            T=T)
     return FleetResult(allocation=allocation, objective=objective,
-                       iters=iters, converged=conv, history=ledger)
+                       iters=iters, converged=conv, history=ledger,
+                       columns=tuple(cols))
 
 
 def allocate_fleet(sys_batch: SystemParams, w: Weights,

@@ -2,7 +2,7 @@
 
 The paper solves one cell of N MAR devices; this package scales the
 unified `repro.solve` dispatcher to a *region* — many heterogeneous cells,
-millions of clients — in three layers:
+millions of clients — as a pipelined serving stack:
 
   * mesh   (`region.mesh`):  shard the cell axis of a stacked fleet across
     a device mesh — set `Problem.mesh` (built with `region_mesh`) and
@@ -12,25 +12,42 @@ millions of clients — in three layers:
     shims;
   * batch  (`region.batch`): pad mixed-size cell pools onto a power-of-two
     bucket menu with masked devices (`pad_system`, `bucket_size`) so real
-    traffic compiles into a handful of shapes;
-  * service (`region.service`): a streaming front-end (`RegionAllocator`)
-    that coalesces allocation requests into bucketed shard-ready batches,
-    warm-starts re-requests from an LRU cache of previous solutions, and
-    takes PER-REQUEST `Weights` — a traced (C, 3) operand of the one
-    compiled solve, so a mixed-demand region costs zero extra compiles
-    (the jit-cache key is `SolverSpec` + the bucket menu, nothing else).
+    traffic compiles into a handful of shapes; `inactive_system` builds
+    the all-masked filler cells short chunks pad with;
+  * the serving pipeline (`region.pipeline`): four layers —
+    **admission** (`region.admission`: per-bucket queues, deadlines,
+    priorities, pluggable batch-closing policies), **planning**
+    (`region.planning`: the bucket/chunk planner + warm-start LRU),
+    **dispatch** (`region.dispatch`: async `solve()` enqueue, double-
+    buffered in-flight batches), and **completion** (`region.completion`:
+    one blocking gather per batch resolving `PendingResponse` futures) —
+    with per-stage `StageClocks`;
+  * service (`region.service`): `RegionAllocator`, the synchronous facade
+    over the pipeline (submit/flush/solve, bit-identical to the
+    pre-pipeline monolith). Requests take PER-REQUEST `Weights` — a
+    traced (C, 3) operand of the one compiled solve, so a mixed-demand
+    region costs zero extra compiles (the jit-cache key is `SolverSpec` +
+    the bucket menu, nothing else).
 
 CPU dev recipe: XLA_FLAGS=--xla_force_host_platform_device_count=8 makes
 one host expose 8 devices for the mesh (see ROADMAP "Region service").
 """
-from .batch import bucket_size, pad_allocation, pad_system
+from .admission import (AdmissionQueue, AllocationRequest, BatchPolicy,
+                        CloseOnFull, DeadlineSlack, MaxWait, StageClocks)
+from .batch import bucket_size, inactive_system, pad_allocation, pad_system
+from .completion import CellResponse, PendingResponse
 from .mesh import (RegionResult, allocate_region, cell_specs, pad_cells,
                    place_cells, region_mesh, run_rounds_region)
-from .service import AllocationRequest, CellResponse, RegionAllocator
+from .pipeline import RegionPipeline
+from .planning import BatchPlan, BatchPlanner, WarmStartCache, group_requests
+from .service import RegionAllocator
 
 __all__ = [
-    "bucket_size", "pad_allocation", "pad_system",
+    "bucket_size", "inactive_system", "pad_allocation", "pad_system",
     "RegionResult", "allocate_region", "cell_specs", "pad_cells",
     "place_cells", "region_mesh", "run_rounds_region",
-    "AllocationRequest", "CellResponse", "RegionAllocator",
+    "AdmissionQueue", "AllocationRequest", "BatchPolicy", "CloseOnFull",
+    "DeadlineSlack", "MaxWait", "StageClocks",
+    "BatchPlan", "BatchPlanner", "WarmStartCache", "group_requests",
+    "CellResponse", "PendingResponse", "RegionPipeline", "RegionAllocator",
 ]

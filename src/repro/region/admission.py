@@ -1,0 +1,202 @@
+"""Admission layer: the request queue in front of the region pipeline.
+
+Requests enter the pipeline here and wait — per bucket — until a
+*batch-closing policy* decides their batch is worth dispatching. The queue
+tracks per-request enqueue times, deadlines, and priorities; when a batch
+closes, its members are handed to the planning layer in
+(priority desc, arrival) order and their queue wait is charged to the
+pipeline's `StageClocks`.
+
+Policies (`AllocationRequest.deadline`/`priority` feed them):
+
+  * `CloseOnFull`   — close only when `cells_per_batch` requests are
+    queued (plus the forced close of a `flush`). The throughput-greedy
+    default: every dispatched chunk is fully occupied, so the compiled
+    batch shape never solves avoidable pad cells.
+  * `MaxWait`       — close-on-full OR when the oldest queued request has
+    waited `max_wait` (in the caller's clock units — wall seconds with the
+    default clock, logical ticks if the caller passes its own `now`).
+    Bounds queue latency under trickle traffic.
+  * `DeadlineSlack` — close-on-full OR when any queued request's deadline
+    is within `slack` of `now`. The SLO-shaped policy: a batch closes
+    exactly early enough for its tightest request.
+
+The clock is caller-defined: every entry point takes `now` (defaulting to
+`time.monotonic()`), so tests and benchmarks can drive the policies with
+logical ticks and deadlines stay in one consistent unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Hashable, List, Optional, Tuple
+
+from repro.core.types import SystemParams, Weights
+
+from .batch import DEFAULT_MIN_BUCKET, bucket_size
+
+
+@dataclasses.dataclass
+class AllocationRequest:
+    """One cell asking for a (re-)allocation against its current channel
+    snapshot. `cell_id` keys the warm-start cache: re-requests of the same
+    cell (drifted gains, same device pool) re-solve from the previous
+    solution. `w`, if set, overrides the allocator's default weights for
+    this request only (traced — never a recompile). `deadline` (absolute,
+    in the admission clock's units) and `priority` (larger first) feed the
+    batch-closing policy and the within-batch ordering."""
+    cell_id: Hashable
+    sys: SystemParams
+    w: Optional[Weights] = None
+    deadline: Optional[float] = None
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class StageClocks:
+    """Aggregate wall time spent in each pipeline stage (seconds, except
+    `queue_wait_s`, which is in the admission clock's units — wall seconds
+    unless the caller drives `now` itself).
+
+      queue_wait_s : sum over requests of (batch close - submit)
+      plan_s       : host-side pad/stack/warm-init batch assembly
+      dispatch_s   : host time to trace/enqueue the solve (async dispatch)
+      device_s     : dispatch -> compute observed ready (in-flight time;
+                     an upper bound measured at the first blocking poll)
+      gather_s     : device->host materialization of responses
+    """
+    queue_wait_s: float = 0.0
+    plan_s: float = 0.0
+    dispatch_s: float = 0.0
+    device_s: float = 0.0
+    gather_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """A request waiting for its batch to close. `token` is an opaque
+    caller payload carried through the queue — the pipeline stores the
+    request's `PendingResponse` there so a closed batch can be bound back
+    to the futures it serves."""
+    request: AllocationRequest
+    t_enqueue: float
+    seq: int    # global arrival order: the FIFO tiebreak within a priority
+    token: object = None
+
+
+class BatchPolicy:
+    """Decides when a bucket's pending requests close into a batch.
+
+    `ready(queued, now, cells_per_batch)` sees the bucket's queue in
+    arrival order and returns True to close a batch of (up to)
+    `cells_per_batch` requests now. A forced `flush` closes everything
+    regardless of the policy."""
+
+    def ready(self, queued: List[QueuedRequest], now: float,
+              cells_per_batch: int) -> bool:
+        raise NotImplementedError
+
+
+class CloseOnFull(BatchPolicy):
+    """Close only full batches (flush drains the rest)."""
+
+    def ready(self, queued, now, cells_per_batch):
+        return len(queued) >= cells_per_batch
+
+
+class MaxWait(BatchPolicy):
+    """Close on full, or when the oldest request has waited `max_wait`."""
+
+    def __init__(self, max_wait: float):
+        if max_wait < 0:
+            raise ValueError(f"MaxWait: max_wait must be >= 0, got {max_wait}")
+        self.max_wait = float(max_wait)
+
+    def ready(self, queued, now, cells_per_batch):
+        if len(queued) >= cells_per_batch:
+            return True
+        return bool(queued) and now - queued[0].t_enqueue >= self.max_wait
+
+
+class DeadlineSlack(BatchPolicy):
+    """Close on full, or when any queued deadline is within `slack` of now.
+
+    Requests without a deadline never trigger the early close (they ride
+    along when a deadlined neighbor closes the batch, or when it fills)."""
+
+    def __init__(self, slack: float = 0.0):
+        self.slack = float(slack)
+
+    def ready(self, queued, now, cells_per_batch):
+        if len(queued) >= cells_per_batch:
+            return True
+        return any(q.request.deadline is not None
+                   and q.request.deadline - now <= self.slack
+                   for q in queued)
+
+
+class AdmissionQueue:
+    """Per-bucket request queues + the batch-closing policy.
+
+    `submit` files a request under its device-count bucket;
+    `close_ready(now)` asks the policy which batches to close and returns
+    them as `(bucket, [QueuedRequest, ...])` groups — each at most
+    `cells_per_batch` long, ordered by (priority desc, arrival), buckets in
+    ascending order (the same deterministic grouping the synchronous
+    `RegionAllocator.solve` always produced for equal priorities)."""
+
+    def __init__(self, cells_per_batch: int,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 policy: Optional[BatchPolicy] = None,
+                 clocks: Optional[StageClocks] = None):
+        if cells_per_batch < 1:
+            raise ValueError("cells_per_batch must be >= 1")
+        self.cells_per_batch = int(cells_per_batch)
+        self.min_bucket = int(min_bucket)
+        self.policy = policy if policy is not None else CloseOnFull()
+        self.clocks = clocks if clocks is not None else StageClocks()
+        self._queues: Dict[int, List[QueuedRequest]] = {}
+        self._seq = 0
+
+    def submit(self, request: AllocationRequest,
+               now: Optional[float] = None, token: object = None) -> int:
+        """Queue a request; returns the bucket it was filed under."""
+        now = time.monotonic() if now is None else now
+        bucket = bucket_size(request.sys.n, self.min_bucket)
+        self._queues.setdefault(bucket, []).append(
+            QueuedRequest(request, now, self._seq, token))
+        self._seq += 1
+        return bucket
+
+    @property
+    def pending(self) -> int:
+        """Requests queued but not yet closed into a batch."""
+        return sum(len(q) for q in self._queues.values())
+
+    def close_ready(self, now: Optional[float] = None, force: bool = False
+                    ) -> List[Tuple[int, List[QueuedRequest]]]:
+        """Close every batch the policy (or `force`) says is ready.
+
+        Returns `(bucket, [QueuedRequest, ...])` groups — each at most
+        `cells_per_batch` long, ordered by (priority desc, arrival),
+        buckets ascending (the deterministic grouping the synchronous
+        `RegionAllocator.solve` always produced for equal priorities)."""
+        now = time.monotonic() if now is None else now
+        closed: List[Tuple[int, List[QueuedRequest]]] = []
+        for bucket in sorted(self._queues):
+            queue = self._queues[bucket]
+            while queue and (force or self.policy.ready(
+                    queue, now, self.cells_per_batch)):
+                # stable sort: FIFO within equal priorities, so the default
+                # (all priority 0) reproduces pure arrival order
+                queue.sort(key=lambda e: (-e.request.priority, e.seq))
+                take = queue[:self.cells_per_batch]
+                queue = queue[self.cells_per_batch:]
+                self._queues[bucket] = queue
+                for e in take:
+                    self.clocks.queue_wait_s += max(0.0, now - e.t_enqueue)
+                closed.append((bucket, take))
+        return closed

@@ -37,36 +37,63 @@ def bucket_size(n: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
     return max(min_bucket, 1 << (n - 1).bit_length())
 
 
-def _pad_tail(x, pad: int, fill):
-    x = jnp.asarray(x)
-    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+def _pad_tail(x, pad: int, fill, xp=jnp):
+    x = xp.asarray(x)
+    return xp.concatenate([x, xp.full((pad,), fill, x.dtype)])
 
 
-def pad_system(sys: SystemParams, n_pad: int) -> SystemParams:
+def pad_system(sys: SystemParams, n_pad: int, xp=jnp) -> SystemParams:
     """Pad a SystemParams to `n_pad` devices with masked, data-free lanes.
 
     The result always carries an `active` mask (all-True over the original
     prefix), even when n_pad == N — so systems from different pools stack
     into one batch with a consistent pytree structure. Padded lanes get
     gain = 1 (any positive value; it only guards divisions), zero cycles/
-    samples/bits, and active = False."""
+    samples/bits, and active = False.
+
+    `xp` picks the array namespace: the default jnp enqueues device ops;
+    the planning layer passes numpy so batch assembly stays host-side and
+    never rides (or blocks on) the device stream. Padding is pure data
+    movement, so both namespaces produce bit-identical operands."""
     n = sys.n
     if n_pad < n:
         raise ValueError(f"pad_system: n_pad={n_pad} < n={n}")
     pad = n_pad - n
     active = sys.active if sys.active is not None \
-        else jnp.ones((n,), bool)
+        else xp.ones((n,), bool)
     return sys.replace(
-        gain=_pad_tail(sys.gain, pad, 1.0),
-        cycles=_pad_tail(sys.cycles, pad, 0.0),
-        samples=_pad_tail(sys.samples, pad, 0.0),
-        bits=_pad_tail(sys.bits, pad, 0.0),
-        active=jnp.concatenate([active, jnp.zeros((pad,), bool)]),
+        gain=_pad_tail(sys.gain, pad, 1.0, xp),
+        cycles=_pad_tail(sys.cycles, pad, 0.0, xp),
+        samples=_pad_tail(sys.samples, pad, 0.0, xp),
+        bits=_pad_tail(sys.bits, pad, 0.0, xp),
+        active=xp.concatenate([xp.asarray(active),
+                               xp.zeros((pad,), bool)]),
+    )
+
+
+def inactive_system(template: SystemParams, xp=jnp) -> SystemParams:
+    """An all-masked batch filler shaped like `template`: every lane
+    inactive, zero data (gain = 1 to guard divisions).
+
+    Short chunks pad their cell axis with these instead of replicating a
+    real cell: a fully inactive cell sits at the masked fixed point, so its
+    BCD lane's (masked) rel-step is exactly 0 and the lane reports
+    convergence after ONE iteration — the `SystemParams.active` zero-lane
+    path — instead of burning a full re-solve of cell 0. Real lanes of the
+    vmapped batch are bit-unaffected (per-cell programs are independent)."""
+    n = template.n
+    dt = xp.asarray(template.gain).dtype
+    return template.replace(
+        gain=xp.ones((n,), dt),
+        cycles=xp.zeros((n,), dt),
+        samples=xp.zeros((n,), dt),
+        bits=xp.zeros((n,), dt),
+        active=xp.zeros((n,), bool),
     )
 
 
 def pad_allocation(alloc: Allocation, n_pad: int,
-                   sys: SystemParams) -> Allocation:
+                   sys: SystemParams, xp=jnp) -> Allocation:
     """Pad a warm-start Allocation to `n_pad` devices.
 
     Pad lanes are filled with the masked solve's fixed point (B = 0,
@@ -74,24 +101,24 @@ def pad_allocation(alloc: Allocation, n_pad: int,
     movement to the (masked) BCD rel-step, so a cached solution behaves
     exactly like its unpadded warm start. `sys` supplies the box values
     (p_min/f_min/s_hi may be per-cell traced leaves)."""
-    n = jnp.asarray(alloc.bandwidth).shape[0]
+    n = xp.asarray(alloc.bandwidth).shape[0]
     pad = int(n_pad) - int(n)
     if pad < 0:
         raise ValueError(f"pad_allocation: n_pad={n_pad} < n={n}")
     if pad == 0:
         return alloc
-    dt = jnp.asarray(alloc.bandwidth).dtype
+    dt = xp.asarray(alloc.bandwidth).dtype
 
     def tail(fill):
-        return jnp.full((pad,), fill, dt)
+        return xp.full((pad,), fill, dt)
 
     return Allocation(
-        bandwidth=jnp.concatenate([alloc.bandwidth, tail(0.0)]),
-        power=jnp.concatenate([jnp.asarray(alloc.power, dt), tail(sys.p_min)]),
-        freq=jnp.concatenate([jnp.asarray(alloc.freq, dt), tail(sys.f_min)]),
-        resolution=jnp.concatenate([jnp.asarray(alloc.resolution, dt),
-                                    tail(sys.s_hi)]),
-        s_relaxed=None if alloc.s_relaxed is None else jnp.concatenate(
-            [jnp.asarray(alloc.s_relaxed, dt), tail(sys.s_hi)]),
+        bandwidth=xp.concatenate([xp.asarray(alloc.bandwidth), tail(0.0)]),
+        power=xp.concatenate([xp.asarray(alloc.power, dt), tail(sys.p_min)]),
+        freq=xp.concatenate([xp.asarray(alloc.freq, dt), tail(sys.f_min)]),
+        resolution=xp.concatenate([xp.asarray(alloc.resolution, dt),
+                                   tail(sys.s_hi)]),
+        s_relaxed=None if alloc.s_relaxed is None else xp.concatenate(
+            [xp.asarray(alloc.s_relaxed, dt), tail(sys.s_hi)]),
         T=alloc.T,
     )

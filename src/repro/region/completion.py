@@ -1,0 +1,121 @@
+"""Completion layer: materialize in-flight batches into `CellResponse`s.
+
+The only blocking device->host transfer of the whole pipeline happens
+here, once per batch: wait for the batch's device arrays, gather the
+scalar fields (iters/converged/objective) in one `np.asarray` each, slice
+every real lane's allocation back to its unpadded (N,) shape, write the
+solutions into the warm-start cache, and resolve the batch's
+`PendingResponse` futures.
+
+`PendingResponse` is the caller-facing future: `result()` materializes on
+demand (forcing dispatch first if the request is still queued), so callers
+can hold responses from several in-flight batches and consume them in any
+order — materializing batch k+2 never waits on batch k.
+
+Stage clocks: the in-flight window (dispatch -> compute observed ready,
+an upper bound measured at the first blocking poll) is charged to
+`StageClocks.device_s`; the host-side gather/slice/cache-write time to
+`gather_s`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Hashable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.types import Allocation
+
+from .admission import AllocationRequest, StageClocks
+from .dispatch import InFlightBatch
+from .planning import WarmStartCache
+
+
+@dataclasses.dataclass
+class CellResponse:
+    cell_id: Hashable
+    allocation: Allocation   # unpadded (N,) leaves
+    objective: float
+    iters: int
+    converged: bool
+    warm: bool               # served from the warm-start cache
+    bucket: int              # padded device count this cell solved at
+
+
+class PendingResponse:
+    """A future for one request's `CellResponse`.
+
+    Lifecycle: queued (in admission) -> in flight (bound to a dispatched
+    batch) -> done. `result()` drives whatever remains: a queued request
+    force-pumps the pipeline, an in-flight one materializes only its own
+    batch."""
+
+    def __init__(self, request: AllocationRequest, pipeline):
+        self.request = request
+        self.cell_id = request.cell_id
+        self._pipeline = pipeline
+        self._batch: Optional[InFlightBatch] = None
+        self._lane: int = -1
+        self._response: Optional[CellResponse] = None
+
+    @property
+    def dispatched(self) -> bool:
+        return self._batch is not None
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    def result(self) -> CellResponse:
+        if self._response is None:
+            self._pipeline._force(self)
+        assert self._response is not None
+        return self._response
+
+    def _bind(self, batch: InFlightBatch, lane: int) -> None:
+        self._batch = batch
+        self._lane = lane
+        batch.pending.append(self)
+
+
+def materialize(batch: InFlightBatch, cache: WarmStartCache,
+                clocks: StageClocks) -> List[CellResponse]:
+    """Gather one batch host-side and resolve its futures (idempotent)."""
+    if batch.materialized:
+        return [p._response for p in batch.pending]
+    plan, res = batch.plan, batch.result
+    t0 = time.monotonic()
+    jax.block_until_ready(res.allocation.bandwidth)
+    t1 = time.monotonic()
+    clocks.device_s += max(0.0, t1 - batch.t_dispatched)
+    # one host transfer per field for the whole batch, then pure-numpy
+    # slicing: enqueueing jnp slice ops here would append them to the TAIL
+    # of the device stream — behind the next in-flight batch's solve — and
+    # re-serialize exactly the pipeline this layer exists to overlap
+    iters = np.asarray(res.iters)
+    conv = np.asarray(res.converged)
+    objs = np.asarray(res.objective)
+    a = res.allocation
+    bw, pw = np.asarray(a.bandwidth), np.asarray(a.power)
+    fq, sr = np.asarray(a.freq), np.asarray(a.resolution)
+    s_rel = None if a.s_relaxed is None else np.asarray(a.s_relaxed)
+    T = None if a.T is None else np.asarray(a.T)
+    responses: List[CellResponse] = []
+    for c, (r, hit) in enumerate(zip(plan.requests, plan.warm)):
+        n = r.sys.n
+        alloc = Allocation(
+            bandwidth=bw[c, :n], power=pw[c, :n],
+            freq=fq[c, :n], resolution=sr[c, :n],
+            s_relaxed=None if s_rel is None else s_rel[c, :n],
+            T=None if T is None else T[c])
+        cache.store(r.cell_id, n, alloc)
+        responses.append(CellResponse(
+            cell_id=r.cell_id, allocation=alloc,
+            objective=float(objs[c]), iters=int(iters[c]),
+            converged=bool(conv[c]), warm=hit, bucket=plan.bucket))
+    for pending in batch.pending:
+        pending._response = responses[pending._lane]
+    batch.materialized = True
+    clocks.gather_s += time.monotonic() - t1
+    return responses

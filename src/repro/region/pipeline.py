@@ -1,0 +1,196 @@
+"""The pipelined region serving stack: admission -> planning -> dispatch ->
+completion, with overlapped asynchronous batches.
+
+`RegionPipeline` wires the four layers around one shared `StageClocks` and
+one `WarmStartCache`:
+
+  * **admission** (`region.admission`): `submit()` files the request under
+    its device-count bucket and returns a `PendingResponse` future; a
+    pluggable `BatchPolicy` (close-on-full, max-wait, deadline-slack)
+    decides when a bucket's queue closes into a batch.
+  * **planning** (`region.planning`): closed batches are padded/stacked
+    into fixed-shape `BatchPlan`s, warm-started from the LRU cache.
+  * **dispatch** (`region.dispatch`): plans are enqueued through the one
+    `solve()` dispatcher WITHOUT blocking — results stay device futures in
+    an `InFlightBatch`. Up to `max_in_flight` batches ride the device
+    queue concurrently (double buffering by default), so batch k+1's host
+    assembly overlaps batch k's device compute.
+  * **completion** (`region.completion`): one blocking gather per batch,
+    on demand — `PendingResponse.result()`, an explicit `drain()`, or the
+    depth bound materializing the oldest batch before a new one is
+    planned.
+
+Warm-start coherence: a batch whose results are not yet materialized has
+not written the cache, so planning a re-request of an *in-flight* cell
+would silently cold-start it (and desync from the synchronous semantics).
+The pipeline tracks in-flight cell ids (`_dirty`) and materializes
+in-flight batches, oldest first, until the conflict clears — traces where
+a cell is requested at most once per batch window (the normal shape) never
+stall.
+
+The synchronous `RegionAllocator` (`region.service`) is a thin facade over
+this class; `pump()`/`poll()` + `PendingResponse` are the asynchronous
+surface for callers that own their event loop.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, Hashable, List, Optional
+
+from repro.api import SolverSpec
+from repro.core.accuracy import AccuracyModel
+from repro.core.types import Weights
+
+from .admission import (AdmissionQueue, AllocationRequest, BatchPolicy,
+                        StageClocks)
+from .batch import DEFAULT_MIN_BUCKET
+from .completion import CellResponse, PendingResponse, materialize
+from .dispatch import Dispatcher, InFlightBatch
+from .planning import BatchPlanner, WarmStartCache
+
+
+class RegionPipeline:
+    """Asynchronous four-layer serving pipeline for region allocation.
+
+    Parameters mirror `RegionAllocator` plus:
+
+    policy : the admission batch-closing policy (default `CloseOnFull`).
+    max_in_flight : how many dispatched batches may be unmaterialized at
+        once (>= 1). 1 degenerates to the old serial solve-then-gather
+        loop; 2 (default) double-buffers host assembly against device
+        compute.
+    """
+
+    def __init__(self, w: Weights, acc: Optional[AccuracyModel] = None,
+                 mesh=None, cells_per_batch: int = 32,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 cache_size: int = 4096,
+                 spec: Optional[SolverSpec] = None,
+                 policy: Optional[BatchPolicy] = None,
+                 max_in_flight: int = 2):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self.w = w
+        self.spec = spec if spec is not None else SolverSpec()
+        self.cells_per_batch = int(cells_per_batch)
+        self.min_bucket = int(min_bucket)
+        self.max_in_flight = int(max_in_flight)
+        self.clocks = StageClocks()
+        self.cache = WarmStartCache(cache_size)
+        self.admission = AdmissionQueue(cells_per_batch, min_bucket,
+                                        policy, clocks=self.clocks)
+        self.planner = BatchPlanner(w, self.cache, cells_per_batch,
+                                    min_bucket, clocks=self.clocks)
+        self.dispatcher = Dispatcher(self.spec, acc, mesh,
+                                     clocks=self.clocks)
+        self._in_flight: Deque[InFlightBatch] = deque()
+        self._dirty: Dict[Hashable, int] = {}   # in-flight cell -> count
+        self._unclaimed: List[PendingResponse] = []
+        self.stats = dict(requests=0, batches=0, cache_hits=0,
+                          cache_misses=0, cells_padded=0, shapes=set())
+
+    # ------------------------------------------------------------ streaming
+    def submit(self, request: AllocationRequest,
+               now: Optional[float] = None) -> PendingResponse:
+        """Admit one request; returns its future. Nothing is dispatched
+        until `pump()`/`poll()` closes a batch (or `result()` forces it)."""
+        pending = PendingResponse(request, self)
+        self.admission.submit(request, now, token=pending)
+        self._unclaimed.append(pending)
+        self.stats["requests"] += 1
+        return pending
+
+    def poll(self, now: Optional[float] = None) -> List[InFlightBatch]:
+        """Policy-driven pump: close and dispatch whatever the batch policy
+        says is ready at `now`. Call this from the serving event loop."""
+        return self.pump(now=now, force=False)
+
+    def pump(self, now: Optional[float] = None,
+             force: bool = False) -> List[InFlightBatch]:
+        """Close ready batches (all of them when `force`), plan and
+        dispatch each — materializing oldest in-flight batches first
+        whenever dispatching would exceed `max_in_flight`. Returns the
+        batches dispatched by this call."""
+        dispatched: List[InFlightBatch] = []
+        for bucket, entries in self.admission.close_ready(now, force):
+            # warm-start coherence: a cell still in flight has not written
+            # its solution to the cache yet — drain oldest-first until the
+            # conflict clears (no-op for traces without in-window repeats)
+            while self._in_flight and any(
+                    e.request.cell_id in self._dirty for e in entries):
+                self._materialize(self._in_flight[0])
+            # depth bound BEFORE planning: at max_in_flight=1 this batch's
+            # assembly starts only after the previous gather — exactly the
+            # old serial solve-then-gather loop (the bench baseline); at
+            # >= 2 the previous batch keeps computing underneath it
+            while len(self._in_flight) >= self.max_in_flight:
+                self._materialize(self._in_flight[0])
+            plan = self.planner.plan([e.request for e in entries], bucket)
+            batch = self.dispatcher.dispatch(plan)
+            for lane, e in enumerate(entries):
+                e.token._bind(batch, lane)
+            for r in plan.requests:
+                self._dirty[r.cell_id] = self._dirty.get(r.cell_id, 0) + 1
+            self.stats["batches"] += 1
+            self.stats["shapes"].add((self.cells_per_batch, plan.bucket))
+            self.stats["cells_padded"] += self.cells_per_batch - plan.n_real
+            self.stats["cache_hits"] += sum(plan.warm)
+            self.stats["cache_misses"] += plan.n_real - sum(plan.warm)
+            self._in_flight.append(batch)
+            dispatched.append(batch)
+        return dispatched
+
+    def drain(self, now: Optional[float] = None) -> List[CellResponse]:
+        """Force-close everything queued, materialize everything in flight,
+        and claim all outstanding futures. Responses come back in
+        (dispatch order, lane order) — exactly the completion order of the
+        old synchronous solve loop."""
+        self.pump(now=now, force=True)
+        while self._in_flight:
+            self._materialize(self._in_flight[0])
+        claimed, self._unclaimed = self._unclaimed, []
+        claimed.sort(key=lambda p: (p._batch.seq, p._lane))
+        return [p.result() for p in claimed]
+
+    # ------------------------------------------------------------ internals
+    def _materialize(self, batch: InFlightBatch) -> None:
+        materialize(batch, self.cache, self.clocks)
+        try:
+            self._in_flight.remove(batch)
+        except ValueError:
+            pass   # already removed by an out-of-order result()
+        for r in batch.plan.requests:
+            left = self._dirty.get(r.cell_id, 0) - 1
+            if left <= 0:
+                self._dirty.pop(r.cell_id, None)
+            else:
+                self._dirty[r.cell_id] = left
+
+    def _force(self, pending: PendingResponse) -> None:
+        """Drive one future to completion: dispatch its batch if still
+        queued, then materialize only that batch (out-of-order OK)."""
+        if pending._batch is None:
+            self.pump(force=True)
+        if pending._batch is None:   # pragma: no cover - defensive
+            raise RuntimeError(
+                "PendingResponse: request never left the admission queue")
+        if not pending._batch.materialized:
+            self._materialize(pending._batch)
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet dispatched."""
+        return self.admission.pending
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched batches not yet materialized."""
+        return len(self._in_flight)
+
+    @property
+    def compiled_shapes(self) -> set:
+        """Distinct (cells, devices) batch shapes dispatched so far — one
+        jit cache entry each (the bucketing acceptance metric)."""
+        return set(self.stats["shapes"])

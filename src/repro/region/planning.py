@@ -1,0 +1,234 @@
+"""Planning layer: turn a closed batch of requests into one solve-ready plan.
+
+This is the bucket/chunk planner extracted from the old monolithic
+`RegionAllocator.solve()`: group requests by power-of-two device bucket
+(`group_requests`, buckets ascending, arrival order within a bucket — the
+deterministic grouping the synchronous API always produced), then assemble
+each chunk into a fixed-shape `BatchPlan`:
+
+  * every cell's pool is padded to the bucket with masked devices
+    (`pad_system`) and warm-started from the `WarmStartCache` when its
+    previous solution is still pool-compatible;
+  * short chunks are padded to `cells_per_batch` with **all-inactive filler
+    cells** (`inactive_system`) instead of replicating a real cell: a fully
+    masked cell sits at the masked fixed point, so its BCD lane's rel-step
+    is exactly 0 and the lane reports convergence after ONE iteration —
+    under the shard-local early exit a shard of pad lanes stops
+    immediately instead of re-solving cell 0. Real lanes are
+    bit-unaffected (vmapped per-cell programs are independent);
+  * per-request weights are collected into the traced (C, 3) operand list
+    (pad lanes carry the planner's default weights — sliced off).
+
+All assembly here is HOST-side numpy (the `xp=np` mode of `pad_system` /
+`initial_allocation` / `stack_systems`): eager `jnp` ops would enqueue
+onto the single device stream, where they (and, past the CPU client's
+in-flight cap, the *enqueue calls themselves*) queue behind the previous
+batch's solve — serializing exactly the overlap the dispatch layer's
+double buffering exists to create. Padding/stacking is pure data movement
+and the init is IEEE-exact elementwise math, so the numpy-assembled
+operands are bit-identical to the device-assembled ones; the jitted solve
+transfers them on dispatch. Host time spent in `plan()` is charged to
+`StageClocks.plan_s`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.bcd import initial_allocation, stack_systems
+from repro.core.types import Allocation, SystemParams, Weights
+
+from .admission import AllocationRequest, StageClocks
+from .batch import (DEFAULT_MIN_BUCKET, bucket_size, inactive_system,
+                    pad_allocation, pad_system)
+
+
+class WarmStartCache:
+    """LRU of previous solutions keyed by cell id: cell_id -> (n, Allocation).
+
+    A re-request of a known cell whose device pool is unchanged warm-starts
+    from its last solution (~2 BCD iterations instead of a cold ~4-8). A
+    re-request with a *resized* pool can never use the cached solution (the
+    shapes differ), so the lookup purges the dead entry immediately instead
+    of letting it occupy LRU capacity until overwritten (`resize_purges`
+    counts these).
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("WarmStartCache: capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[Hashable, Tuple[int, Allocation]]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.resize_purges = 0
+        self.evictions = 0
+
+    def lookup(self, cell_id: Hashable, n: int) -> Optional[Allocation]:
+        """The cell's cached solution if still pool-compatible, else None
+        (purging a stale entry whose pool was resized)."""
+        cached = self._entries.get(cell_id)
+        if cached is None:
+            self.misses += 1
+            return None
+        if cached[0] != n:
+            # the dead entry would never be served again — free its slot now
+            del self._entries[cell_id]
+            self.resize_purges += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(cell_id)
+        self.hits += 1
+        return cached[1]
+
+    def store(self, cell_id: Hashable, n: int, alloc: Allocation) -> None:
+        self._entries[cell_id] = (int(n), alloc)
+        self._entries.move_to_end(cell_id)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, cell_id: Hashable) -> bool:
+        return cell_id in self._entries
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One solve-ready batch: fixed (cells_per_batch, bucket) shapes.
+
+    `requests`/`warm` cover only the `n_real` real lanes (in solve order);
+    lanes `n_real..C-1` are all-inactive filler cells."""
+    requests: List[AllocationRequest]
+    bucket: int
+    sys_batch: SystemParams      # (C, bucket) leaves
+    init_batch: Allocation       # (C, bucket) leaves
+    weights: List[Weights]       # length C
+    warm: List[bool]             # length n_real
+    n_real: int
+
+
+def group_requests(requests: Sequence[AllocationRequest],
+                   cells_per_batch: int,
+                   min_bucket: int = DEFAULT_MIN_BUCKET
+                   ) -> List[Tuple[int, List[AllocationRequest]]]:
+    """The synchronous grouping: by device-count bucket (ascending), chunked
+    to `cells_per_batch` in arrival order. Each `(bucket, chunk)` is one
+    compiled-shape solve."""
+    by_bucket: Dict[int, List[AllocationRequest]] = {}
+    for r in requests:
+        by_bucket.setdefault(bucket_size(r.sys.n, min_bucket), []).append(r)
+    out: List[Tuple[int, List[AllocationRequest]]] = []
+    for bucket in sorted(by_bucket):
+        group = by_bucket[bucket]
+        for i in range(0, len(group), cells_per_batch):
+            out.append((bucket, group[i:i + cells_per_batch]))
+    return out
+
+
+def _pin_floats(tree, dt):
+    """Convert a pytree to host numpy with float leaves pinned to `dt` —
+    numpy would otherwise widen python-float scalars (box bounds, the
+    bandwidth split) to f64 where eager jnp (x32 mode) made them f32,
+    silently forking the solve's jit key per array namespace."""
+    def conv(x):
+        a = np.asarray(x)
+        return a.astype(dt) if a.dtype.kind == "f" and a.dtype != dt else a
+
+    return jax.tree_util.tree_map(conv, tree)
+
+
+def _host_system(sys: SystemParams) -> SystemParams:
+    """Pull a request's system to host numpy once, so every downstream
+    assembly op stays off the device stream."""
+    return _pin_floats(sys, np.asarray(sys.gain).dtype)
+
+
+def _full_allocation(init: Allocation) -> Allocation:
+    """Normalize a warm/cold init to carry s_relaxed and T leaves."""
+    if init.s_relaxed is not None and init.T is not None:
+        return init
+    dt = np.asarray(init.bandwidth).dtype
+    return Allocation(
+        bandwidth=init.bandwidth, power=init.power,
+        freq=init.freq, resolution=init.resolution,
+        s_relaxed=init.resolution if init.s_relaxed is None
+        else init.s_relaxed,
+        T=np.zeros((), dt) if init.T is None else init.T)
+
+
+class BatchPlanner:
+    """Assemble `(bucket, chunk)` groups into fixed-shape `BatchPlan`s.
+
+    Owns the warm-start policy (via the shared `WarmStartCache`) and the
+    pad-lane strategy; charges its host time to `clocks.plan_s`.
+    """
+
+    def __init__(self, w: Weights, cache: WarmStartCache,
+                 cells_per_batch: int,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 clocks: Optional[StageClocks] = None):
+        if cells_per_batch < 1:
+            raise ValueError("cells_per_batch must be >= 1")
+        self.w = w
+        self.cache = cache
+        self.cells_per_batch = int(cells_per_batch)
+        self.min_bucket = int(min_bucket)
+        self.clocks = clocks if clocks is not None else StageClocks()
+
+    def group(self, requests: Sequence[AllocationRequest]
+              ) -> List[Tuple[int, List[AllocationRequest]]]:
+        return group_requests(requests, self.cells_per_batch,
+                              self.min_bucket)
+
+    def plan(self, chunk: Sequence[AllocationRequest],
+             bucket: int) -> BatchPlan:
+        """Pad/stack one chunk (<= cells_per_batch requests of one bucket)
+        into a solve-ready plan. Warm flags reflect the cache at *plan*
+        time — the pipeline must not plan a cell whose previous solve is
+        still in flight (see `RegionPipeline._dirty`)."""
+        t0 = time.monotonic()
+        C = self.cells_per_batch
+        if not 0 < len(chunk) <= C:
+            raise ValueError(
+                f"plan: chunk of {len(chunk)} requests for "
+                f"cells_per_batch={C}")
+        padded = [pad_system(_host_system(r.sys), bucket, xp=np)
+                  for r in chunk]
+        dt = np.asarray(padded[0].gain).dtype
+        inits: List[Allocation] = []
+        warm: List[bool] = []
+        weights = [r.w if r.w is not None else self.w for r in chunk]
+        for r, ps in zip(chunk, padded):
+            cached = self.cache.lookup(r.cell_id, r.sys.n)
+            if cached is None:
+                inits.append(_pin_floats(_full_allocation(
+                    initial_allocation(ps, xp=np)), dt))
+                warm.append(False)
+            else:
+                inits.append(_pin_floats(_full_allocation(
+                    pad_allocation(cached, bucket, ps, xp=np)), dt))
+                warm.append(True)
+        n_real = len(chunk)
+        if n_real < C:
+            # all-inactive filler lanes: converge in one masked iteration
+            filler_sys = inactive_system(padded[0], xp=np)
+            filler_init = _pin_floats(_full_allocation(
+                initial_allocation(filler_sys, xp=np)), dt)
+            padded.extend([filler_sys] * (C - n_real))
+            inits.extend([filler_init] * (C - n_real))
+            weights.extend([self.w] * (C - n_real))
+        sys_batch = stack_systems(padded, xp=np)
+        init_batch = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *inits)
+        self.clocks.plan_s += time.monotonic() - t0
+        return BatchPlan(requests=list(chunk), bucket=int(bucket),
+                         sys_batch=sys_batch, init_batch=init_batch,
+                         weights=weights, warm=warm, n_real=n_real)

@@ -1,72 +1,53 @@
-"""Service layer: a streaming front-end for region-scale allocation.
+"""Service layer: the synchronous facade over the region serving pipeline.
 
-`RegionAllocator` accepts a stream of `AllocationRequest`s (one per cell:
-the cell's current SystemParams snapshot), coalesces them into bucketed,
-shard-ready batches, and returns per-cell results:
+`RegionAllocator` keeps the historical blocking API — `submit` requests,
+`flush`/`solve` return `{cell_id: CellResponse}` — as a thin facade over
+the four-layer `RegionPipeline` (`region.pipeline`):
 
-  * **bucketing**: each request's device pool is padded to
-    `bucket_size(N)` (power of two, floored) so a mixed-size trace
-    compiles a handful of XLA programs instead of one per distinct N;
-  * **fixed batch shape**: each solve batches exactly `cells_per_batch`
-    cells (short batches are padded by replicating a cell and sliced off),
-    so the compiled-shape count is #buckets, independent of traffic;
-  * **warm starts**: an LRU cache keyed by cell identity holds the last
-    solution per cell; a re-request of a drifted cell re-solves from it in
-    ~2 BCD iterations instead of a cold ~8-25 (PR 3's measurement);
-  * **per-request weights**: each `AllocationRequest` may carry its own
-    `Weights` (multi-cell mixed-demand deployments: every cell weighs
-    energy/latency/accuracy differently). Weights are a traced (C, 3)
-    operand of the jitted solve, so mixed weights add ZERO compiled
-    shapes — only `SolverSpec` + the bucket menu key the jit cache;
-  * **sharding**: batches run through `repro.solve` — sharded over the
-    mesh when one is given (shard-local early exit), plain fleet vmap
-    when `mesh=None`.
+    admission  — per-bucket request queues + batch-closing policies
+                 (`region.admission`: close-on-full / max-wait /
+                 deadline-slack, per-request deadlines and priorities);
+    planning   — the bucket/chunk planner (`region.planning`): pad mixed
+                 pools onto the power-of-two bucket menu, warm-start from
+                 the LRU `WarmStartCache`, fill short chunks with
+                 all-inactive pad cells that converge in one masked
+                 iteration;
+    dispatch   — `solve()` enqueued asynchronously (`region.dispatch`):
+                 results stay device futures, up to `pipeline_depth`
+                 batches in flight, so batch k+1's host assembly overlaps
+                 batch k's device compute;
+    completion — one blocking gather per batch (`region.completion`),
+                 resolving `PendingResponse` futures and writing the warm
+                 cache.
 
-`stats` tracks requests, cache hits, batches, and the set of compiled batch
-shapes — the acceptance signal for the bucketing policy.
+The facade is *bit-identical* to the pre-pipeline monolith (parity-tested
+in tests/test_region_pipeline.py): same bucket-ascending/arrival-order
+grouping, same warm-start decisions (in-flight cells stall planning until
+their solutions land in the cache), same responses. Only the overlap
+changed — with `pipeline_depth >= 2` even the synchronous `solve()`
+assembles chunk k+1 while chunk k computes.
+
+Per-stage wall time (queue wait / plan / dispatch / device / gather) is
+tracked in `RegionAllocator.clocks`; `stats` keeps the request/batch/
+cache/shape counters — the acceptance signals for bucketing and warm
+starts. For latency-shaped serving (p50/p99, Poisson/bursty traces) drive
+the `RegionPipeline` directly: `submit()` returns futures and `poll()`
+runs the batch-closing policy; see `benchmarks/run.py::serve_latency`.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.api import SolverSpec
+from repro.core.accuracy import AccuracyModel
+from repro.core.types import Weights
 
-from repro.api import Problem, SolverSpec, solve
-from repro.core.accuracy import AccuracyModel, default_accuracy
-from repro.core.bcd import initial_allocation, stack_systems
-from repro.core.types import Allocation, SystemParams, Weights
+from .admission import (AllocationRequest, BatchPolicy, StageClocks)
+from .batch import DEFAULT_MIN_BUCKET
+from .completion import CellResponse, PendingResponse
+from .pipeline import RegionPipeline
 
-from .batch import DEFAULT_MIN_BUCKET, bucket_size, pad_allocation, pad_system
-from .mesh import RegionResult
-
-Array = jnp.ndarray
-
-
-@dataclasses.dataclass
-class AllocationRequest:
-    """One cell asking for a (re-)allocation against its current channel
-    snapshot. `cell_id` keys the warm-start cache: re-requests of the same
-    cell (drifted gains, same device pool) re-solve from the previous
-    solution. `w`, if set, overrides the allocator's default weights for
-    this request only (traced — never a recompile)."""
-    cell_id: Hashable
-    sys: SystemParams
-    w: Optional[Weights] = None
-
-
-@dataclasses.dataclass
-class CellResponse:
-    cell_id: Hashable
-    allocation: Allocation   # unpadded (N,) leaves
-    objective: float
-    iters: int
-    converged: bool
-    warm: bool               # served from the warm-start cache
-    bucket: int              # padded device count this cell solved at
+__all__ = ["AllocationRequest", "CellResponse", "RegionAllocator"]
 
 
 class RegionAllocator:
@@ -76,7 +57,7 @@ class RegionAllocator:
     ----------
     w : the region's *default* objective weights; any request may override
         them with its own `AllocationRequest.w` (traced per request, zero
-        extra compiles — the PR 4 fragmentation caveat is closed).
+        extra compiles).
     spec : a `SolverSpec` with the static solver options — the jit-cache
         key shared by every batch this allocator solves.
     mesh : jax mesh to shard batches over (None = single-device fleet
@@ -84,6 +65,10 @@ class RegionAllocator:
     cells_per_batch : fixed cell-axis length of every compiled solve.
     min_bucket : floor of the power-of-two device-count buckets.
     cache_size : max cells kept in the warm-start LRU.
+    policy : admission batch-closing policy for the async path (default
+        close-on-full; `flush`/`solve` force-close regardless).
+    pipeline_depth : max dispatched-but-unmaterialized batches (1 = the
+        old serial solve-then-gather loop; 2 = double buffering).
     max_iters / tol / sp* kwargs : legacy spellings of the SolverSpec
         fields, honored when `spec` is not given.
     """
@@ -93,18 +78,14 @@ class RegionAllocator:
                  min_bucket: int = DEFAULT_MIN_BUCKET,
                  cache_size: int = 4096,
                  spec: Optional[SolverSpec] = None,
+                 policy: Optional[BatchPolicy] = None,
+                 pipeline_depth: int = 2,
                  max_iters: Optional[int] = None, tol: Optional[float] = None,
                  sp2_iters: Optional[int] = None,
                  sp2_method: Optional[str] = None,
                  sp1_method: Optional[str] = None):
         if cells_per_batch < 1:
             raise ValueError("cells_per_batch must be >= 1")
-        self.w = w
-        self.acc = acc if acc is not None else default_accuracy()
-        self.mesh = mesh
-        self.cells_per_batch = int(cells_per_batch)
-        self.min_bucket = int(min_bucket)
-        self.cache_size = int(cache_size)
         legacy = {k: v for k, v in dict(
             max_iters=max_iters, tol=tol, sp2_iters=sp2_iters,
             sp2_method=sp2_method, sp1_method=sp1_method).items()
@@ -118,23 +99,26 @@ class RegionAllocator:
             self.spec = spec
         else:
             self.spec = SolverSpec(**legacy)
-        # cell_id -> (n_devices, Allocation with (n,) leaves incl. T)
-        self._cache: "OrderedDict[Hashable, Tuple[int, Allocation]]" = \
-            OrderedDict()
-        self._pending: List[AllocationRequest] = []
-        self.stats = dict(requests=0, batches=0, cache_hits=0,
-                          cache_misses=0, cells_padded=0,
-                          shapes=set())
+        self.w = w
+        self.acc = acc
+        self.mesh = mesh
+        self.cells_per_batch = int(cells_per_batch)
+        self.min_bucket = int(min_bucket)
+        self.cache_size = int(cache_size)
+        self.pipeline = RegionPipeline(
+            w, acc=acc, mesh=mesh, cells_per_batch=cells_per_batch,
+            min_bucket=min_bucket, cache_size=cache_size, spec=self.spec,
+            policy=policy, max_in_flight=pipeline_depth)
 
     # ------------------------------------------------------------- stream
-    def submit(self, request: AllocationRequest) -> None:
-        """Queue a request for the next `flush()`."""
-        self._pending.append(request)
+    def submit(self, request: AllocationRequest) -> PendingResponse:
+        """Queue a request for the next `flush()`. The returned future can
+        also be resolved directly (`.result()` force-drives the pipeline)."""
+        return self.pipeline.submit(request)
 
     def flush(self) -> Dict[Hashable, CellResponse]:
         """Solve everything queued since the last flush."""
-        reqs, self._pending = self._pending, []
-        return self.solve(reqs)
+        return {r.cell_id: r for r in self.pipeline.drain()}
 
     # -------------------------------------------------------------- batch
     def solve(self, requests: Sequence[AllocationRequest]
@@ -145,94 +129,25 @@ class RegionAllocator:
         into fixed `cells_per_batch` solves (the jit-cache key is therefore
         just the bucket). Returns {cell_id: CellResponse}.
         """
-        out: Dict[Hashable, CellResponse] = {}
-        by_bucket: Dict[int, List[AllocationRequest]] = {}
         for r in requests:
-            by_bucket.setdefault(
-                bucket_size(r.sys.n, self.min_bucket), []).append(r)
-        for bucket in sorted(by_bucket):
-            group = by_bucket[bucket]
-            for i in range(0, len(group), self.cells_per_batch):
-                chunk = group[i:i + self.cells_per_batch]
-                out.update(self._solve_chunk(chunk, bucket))
-        self.stats["requests"] += len(requests)
-        return out
+            self.pipeline.submit(r)
+        return {r.cell_id: r for r in self.pipeline.drain()}
 
-    def _warm_init(self, req: AllocationRequest, padded: SystemParams,
-                   bucket: int) -> Tuple[Optional[Allocation], bool]:
-        cached = self._cache.get(req.cell_id)
-        if cached is None or cached[0] != req.sys.n:
-            return None, False   # unknown cell or its pool was resized
-        self._cache.move_to_end(req.cell_id)
-        return pad_allocation(cached[1], bucket, padded), True
+    # -------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict:
+        return self.pipeline.stats
 
-    def _solve_chunk(self, chunk: Sequence[AllocationRequest], bucket: int
-                     ) -> Dict[Hashable, CellResponse]:
-        C = self.cells_per_batch
-        padded = [pad_system(r.sys, bucket) for r in chunk]
-        inits, warm = [], []
-        w_cells = [r.w if r.w is not None else self.w for r in chunk]
-        for r, ps in zip(chunk, padded):
-            init, hit = self._warm_init(r, ps, bucket)
-            if init is None:
-                init = initial_allocation(ps)
-            if init.s_relaxed is None or init.T is None:
-                dt = jnp.asarray(init.bandwidth).dtype
-                init = Allocation(
-                    bandwidth=init.bandwidth, power=init.power,
-                    freq=init.freq, resolution=init.resolution,
-                    s_relaxed=init.resolution if init.s_relaxed is None
-                    else init.s_relaxed,
-                    T=jnp.zeros((), dt) if init.T is None else init.T)
-            inits.append(init)
-            warm.append(hit)
-        # fixed batch shape: short chunks replicate cell 0 (sliced off)
-        n_real = len(chunk)
-        while len(padded) < C:
-            padded.append(padded[0])
-            inits.append(inits[0])
-            w_cells.append(w_cells[0])
-        sys_batch = stack_systems(padded)
-        init_batch = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
-        # one solve() per chunk: per-request weights ride along as a traced
-        # (C, 3) operand — the jit-cache key is (spec, topology, bucket) only
-        res = solve(Problem(system=sys_batch, weights=w_cells, acc=self.acc,
-                            init=init_batch, mesh=self.mesh), self.spec)
-        if isinstance(res, RegionResult):
-            res = res.fleet
-        self.stats["batches"] += 1
-        self.stats["shapes"].add((C, bucket))
-        self.stats["cells_padded"] += C - n_real
-        self.stats["cache_hits"] += sum(warm)
-        self.stats["cache_misses"] += n_real - sum(warm)
+    @property
+    def clocks(self) -> StageClocks:
+        """Per-stage wall clocks (queue wait / plan / dispatch / device /
+        gather) aggregated across the pipeline."""
+        return self.pipeline.clocks
 
-        # one host gather for the whole chunk's scalar fields
-        iters = np.asarray(res.iters[:n_real])
-        conv = np.asarray(res.converged[:n_real])
-        objs = np.asarray(res.objective[:n_real])
-        out: Dict[Hashable, CellResponse] = {}
-        for c, (r, hit) in enumerate(zip(chunk, warm)):
-            n = r.sys.n
-            a = res.allocation
-            alloc = Allocation(
-                bandwidth=a.bandwidth[c, :n], power=a.power[c, :n],
-                freq=a.freq[c, :n], resolution=a.resolution[c, :n],
-                s_relaxed=None if a.s_relaxed is None
-                else a.s_relaxed[c, :n],
-                T=None if a.T is None else a.T[c])
-            self._remember(r.cell_id, n, alloc)
-            out[r.cell_id] = CellResponse(
-                cell_id=r.cell_id, allocation=alloc,
-                objective=float(objs[c]), iters=int(iters[c]),
-                converged=bool(conv[c]), warm=hit, bucket=bucket)
-        return out
-
-    # -------------------------------------------------------------- cache
-    def _remember(self, cell_id: Hashable, n: int, alloc: Allocation):
-        self._cache[cell_id] = (n, alloc)
-        self._cache.move_to_end(cell_id)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
+    @property
+    def _cache(self):
+        """Back-compat view of the warm-start LRU's underlying mapping."""
+        return self.pipeline.cache._entries
 
     @property
     def solver_kw(self):
@@ -250,4 +165,4 @@ class RegionAllocator:
     def compiled_shapes(self) -> set:
         """Distinct (cells, devices) batch shapes solved so far — one jit
         cache entry each (the bucketing acceptance metric)."""
-        return set(self.stats["shapes"])
+        return self.pipeline.compiled_shapes

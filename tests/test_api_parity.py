@@ -101,6 +101,34 @@ def test_solve_matches_fixed_deadline_bit_identical():
     assert old.history == new.history
 
 
+def test_fixed_deadline_fleet_matches_per_cell_single_solves():
+    """A (C, N) stack with `deadline` vmaps the fixed-deadline BCD: every
+    cell must match its own single-cell solve bit-for-bit, including with
+    per-cell (C,) deadline budgets."""
+    C = 3
+    fleet = make_fleet(jax.random.PRNGKey(5), n_cells=C, n_devices=8)
+    w = Weights(0.99, 0.01, 1.0)
+    deadlines = jnp.asarray([90.0, 120.0, 150.0])
+    spec = SolverSpec(max_iters=6)
+    res = solve(Problem(system=fleet, weights=w, deadline=deadlines), spec)
+    assert res.objective.shape == (C,)
+    assert res.columns[0] == "energy"
+    for c in range(C):
+        cell = jax.tree_util.tree_map(lambda x: x[c], fleet)
+        single = solve(Problem(system=cell, weights=w,
+                               deadline=float(deadlines[c])), spec)
+        got = jax.tree_util.tree_map(lambda x: x[c], res.allocation)
+        assert _tree_equal(got, single.allocation), c
+        assert bool(res.objective[c] == single.objective), c
+        assert int(res.iters[c]) == single.iters, c
+    # a scalar deadline broadcasts to every cell
+    flat = solve(Problem(system=fleet, weights=w, deadline=120.0), spec)
+    one = solve(Problem(
+        system=jax.tree_util.tree_map(lambda x: x[1], fleet),
+        weights=w, deadline=120.0), spec)
+    assert bool(flat.objective[1] == one.objective)
+
+
 # ---------------------------------------------------------------------------
 # per-cell traced weights: the PR 4 fragmentation caveat, closed
 # ---------------------------------------------------------------------------
@@ -273,8 +301,9 @@ def test_dispatcher_rejects_bad_combinations():
         solve(Problem(system=sysp, weights=W, rounds=RoundsConfig(rounds=2)))
     with pytest.raises(ValueError, match="stacked"):
         solve(Problem(system=sysp, weights=W, mesh=region_mesh()))
-    with pytest.raises(NotImplementedError, match="single-cell"):
-        solve(Problem(system=fleet, weights=W, deadline=100.0))
+    with pytest.raises(NotImplementedError, match="mesh"):
+        solve(Problem(system=fleet, weights=W, deadline=100.0,
+                      mesh=region_mesh()))
     with pytest.raises(ValueError, match="cell axis"):
         solve(Problem(system=sysp, weights=[W, W]))
     # a tuned spec on a rounds problem would be silently ignored — reject

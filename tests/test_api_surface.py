@@ -30,6 +30,9 @@ EXPECTED_ALL = {
     # dynamics / region
     "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
     "RegionAllocator", "RegionResult", "region_mesh",
+    # region serving pipeline (admission policies + async futures)
+    "RegionPipeline", "PendingResponse", "StageClocks",
+    "CloseOnFull", "MaxWait", "DeadlineSlack",
     # legacy shims (deprecated)
     "allocate", "allocate_fixed_deadline", "allocate_fleet",
     "allocate_region", "run_rounds", "run_rounds_fleet",
