@@ -50,18 +50,22 @@ still works, delegates verbatim (bit-identical results), and warns
     ================================  =====================================
 
 Subpackages: `repro.core` (paper model + jitted solvers), `repro.region`
-(bucketed, mesh-sharded serving), `repro.dynamics` (round engine),
+(bucketed, mesh-sharded serving), `repro.dynamics` (round engine +
+mobility traces), `repro.assoc` (cross-cell user association),
 `repro.fl` (FedAvg coupling), `repro.kernels` (Pallas kernels).
 """
 from repro.api import (Problem, SolverSpec, TolFloorWarning, WeightsLike,
                        rel_step_floor, solve, weights_leaf)
+from repro.assoc import (AssocConfig, AssocResult, make_multicell,
+                         solve_assoc)
 from repro.core import (AccuracyModel, Allocation, BCDResult, FleetResult,
                         SystemParams, Weights, allocate,
                         allocate_fixed_deadline, allocate_fleet,
                         default_accuracy, make_fleet, make_system,
                         stack_systems)
-from repro.dynamics import (RoundsConfig, RoundsResult, run_rounds,
-                            run_rounds_fleet)
+from repro.dynamics import (MobilityConfig, MobilityTrace, RoundsConfig,
+                            RoundsResult, replay_mobility, run_rounds,
+                            run_rounds_fleet, simulate_mobility)
 from repro.region import (AllocationRequest, CellResponse, CloseOnFull,
                           DeadlineSlack, MaxWait, PendingResponse,
                           RegionAllocator, RegionPipeline, RegionResult,
@@ -79,6 +83,10 @@ __all__ = [
     # dynamics / region
     "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
     "RegionAllocator", "RegionResult", "region_mesh",
+    # cross-cell association + mobility churn
+    "AssocConfig", "AssocResult", "solve_assoc", "make_multicell",
+    "MobilityConfig", "MobilityTrace", "simulate_mobility",
+    "replay_mobility",
     # region serving pipeline (admission policies + async futures)
     "RegionPipeline", "PendingResponse", "StageClocks",
     "CloseOnFull", "MaxWait", "DeadlineSlack",

@@ -119,9 +119,14 @@ class Problem:
     key : PRNG key for the dynamics channel/participation sampling
         (required when `rounds` is set).
     deadline : total completion-time budget T_total — solve becomes the
-        deadline-constrained variant (single cell only).
+        deadline-constrained variant (single cell, stacked fleet, or
+        mesh-sharded region).
     bandwidth_frac : initial bandwidth split fraction for the
         deadline-constrained cold start (Fig. 9 uses 0.5).
+    assoc : an `assoc.AssocConfig` — solve becomes the BCD-over-association
+        outer loop on a stacked (C, N) cross-cell system (row c = every
+        device's gain to cell c; see `assoc.make_multicell`). Composes
+        with `mesh` (inner solves shard); exclusive with rounds/deadline.
     """
     system: SystemParams
     weights: WeightsLike
@@ -132,6 +137,7 @@ class Problem:
     key: Optional[jax.Array] = None
     deadline: Optional[float] = None
     bandwidth_frac: float = 1.0
+    assoc: Optional[Any] = None
 
     @property
     def cells(self) -> Optional[int]:

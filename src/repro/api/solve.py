@@ -13,7 +13,10 @@ code path that routes on `Problem` topology:
     + rounds config    -> round-dynamics scan (`RoundsResult`)
     + deadline         -> deadline-constrained BCD (`BCDResult`; on a
                           (C, N) stack a fleet vmap with per-cell
-                          deadlines -> `FleetResult`)
+                          deadlines -> `FleetResult`; + mesh a sharded
+                          region solve -> `RegionResult`)
+    + assoc config     -> BCD-over-association outer loop on a stacked
+                          cross-cell system (`assoc.AssocResult`)
 
 Weights enter the jitted solvers as a traced ``(3,)`` / ``(C, 3)`` operand
 (`api.problem.weights_leaf`), so per-cell / per-request weights cost zero
@@ -25,6 +28,7 @@ results are bit-identical by construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Optional
 
@@ -108,6 +112,19 @@ def solve(problem: Problem, spec: Optional[SolverSpec] = None):
         # lockstep selects the GSPMD execution mode of a mesh solve; on a
         # meshless problem it would silently do nothing
         raise ValueError("solve: SolverSpec.lockstep requires Problem.mesh")
+    if problem.assoc is not None:
+        from repro.assoc.loop import solve_assoc
+
+        if problem.rounds is not None or problem.deadline is not None:
+            raise ValueError(
+                "solve: assoc is exclusive with rounds/deadline (the "
+                "association loop owns the outer iteration)")
+        if cells is None:
+            raise ValueError(
+                "solve: assoc requires a stacked (C, N) cross-cell system "
+                "(assoc.make_multicell)")
+        return solve_assoc(
+            dataclasses.replace(problem, system=sysp, init=init), spec)
     if problem.rounds is not None:
         if problem.deadline is not None:
             raise ValueError("solve: rounds and deadline are exclusive")
@@ -136,9 +153,10 @@ def solve(problem: Problem, spec: Optional[SolverSpec] = None):
         return _solve_rounds_fleet(problem, spec, sysp, init)
     if problem.deadline is not None:
         if problem.mesh is not None:
-            raise NotImplementedError(
-                "solve: the deadline-constrained variant does not shard "
-                "over a mesh yet (single-cell and stacked fleets only)")
+            if cells is None:
+                raise ValueError("solve: mesh requires a stacked (C, N) "
+                                 "system (stack_systems / make_fleet)")
+            return _solve_fixed_region(problem, spec, sysp, init)
         if cells is not None:
             return _solve_fixed_fleet(problem, spec, sysp, init)
         return _solve_fixed(problem, spec, sysp, init)
@@ -222,14 +240,7 @@ def _solve_fixed_fleet(p: Problem, spec: SolverSpec, sysp, init):
     dtype = jnp.asarray(sysp.gain).dtype
     C = int(jnp.asarray(sysp.gain).shape[0])
     warr = weights_leaf(p.weights, dtype, cells=C)
-    deadline = jnp.asarray(p.deadline, dtype)
-    if deadline.ndim not in (0, 1) or (deadline.ndim == 1
-                                       and deadline.shape[0] != C):
-        raise ValueError(
-            f"solve: deadline must be a scalar or a ({C},) per-cell "
-            f"array, got shape {deadline.shape}")
-    T_round = jnp.broadcast_to(deadline, (C,)) \
-        / jnp.asarray(sysp.global_rounds, dtype)
+    T_round = _per_cell_T_round(p, sysp, C, dtype)
     alloc0 = init if init is not None else jax.vmap(
         lambda sysc: initial_allocation(
             sysc, bandwidth_frac=p.bandwidth_frac))(sysp)
@@ -237,6 +248,56 @@ def _solve_fixed_fleet(p: Problem, spec: SolverSpec, sysp, init):
                               spec.sp2_method, spec.sp2_iters)
     out = jax.vmap(fn)(sysp, warr, T_round, alloc0)
     return _fleet_result(out, spec.max_iters, dtype, cols=_FIXED_COLS)
+
+
+def _per_cell_T_round(p: Problem, sysp, C: int, dtype):
+    """Per-round deadline (C,) operand: scalar budgets broadcast, (C,)
+    budgets pass through — traced either way, never a recompile."""
+    deadline = jnp.asarray(p.deadline, dtype)
+    if deadline.ndim not in (0, 1) or (deadline.ndim == 1
+                                       and deadline.shape[0] != C):
+        raise ValueError(
+            f"solve: deadline must be a scalar or a ({C},) per-cell "
+            f"array, got shape {deadline.shape}")
+    return jnp.broadcast_to(deadline, (C,)) \
+        / jnp.asarray(sysp.global_rounds, dtype)
+
+
+def _solve_fixed_region(p: Problem, spec: SolverSpec, sysp, init):
+    """Deadline-constrained fleet solve sharded over `Problem.mesh`: the
+    vmapped `_fleet_fixed_cell_fn` under the region shard_map, exactly the
+    free-variant `_solve_region` layout — pad the cell axis to a mesh
+    multiple, place, solve (shard-local convergence exit unless
+    `SolverSpec.lockstep`), slice. Per-cell results are bit-identical to
+    the unsharded `_solve_fixed_fleet` path (sharding moves work, not
+    math; parity-tested in tests/test_region.py)."""
+    from repro.region.mesh import (RegionResult, _pack_stats,
+                                   _region_fixed_impl, _slice_fleet,
+                                   pad_cells, place_cells)
+
+    mesh = p.mesh
+    acc = p.acc if p.acc is not None else default_accuracy()
+    C = int(jnp.asarray(sysp.gain).shape[0])
+    D = int(mesh.devices.size)
+    Cp = -(-C // D) * D
+    dtype = jnp.asarray(sysp.gain).dtype
+    T_round = _per_cell_T_round(p, sysp, C, dtype)
+    alloc0 = init if init is not None else jax.vmap(
+        lambda sysc: initial_allocation(
+            sysc, bandwidth_frac=p.bandwidth_frac))(sysp)
+    sysb = place_cells(pad_cells(sysp, Cp), mesh)
+    warr = place_cells(pad_cells(weights_leaf(p.weights, dtype, cells=C),
+                                 Cp), mesh)
+    T_b = place_cells(pad_cells(T_round, Cp), mesh)
+    alloc0b = place_cells(pad_cells(alloc0, Cp), mesh)
+    out = _region_fixed_impl(sysb, warr, T_b, alloc0b,
+                             jnp.asarray(spec.tol, dtype), acc,
+                             spec.max_iters, spec.sp2_method, spec.sp2_iters,
+                             mesh, spec.lockstep)
+    fleet = _slice_fleet(
+        _fleet_result(out, spec.max_iters, dtype, cols=_FIXED_COLS), C)
+    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
+                        _n_cells=C, _mesh_devices=D)
 
 
 def _solve_fleet(p: Problem, spec: SolverSpec, sysp, init):

@@ -1,0 +1,285 @@
+"""BCD-over-association: the cross-cell user association outer loop.
+
+The paper fixes each device to one base station; its multi-cell follow-ups
+(arXiv:2212.08324, arXiv:2301.12085) let devices pick a serving cell. This
+module layers that choice over the existing per-cell `solve()`:
+
+  1. *association step* — each device greedily picks the cell minimizing
+     its marginal weighted cost given the current allocations, under
+     per-cell capacity caps (`AssocConfig.capacity`);
+  2. *resource step* — the per-cell resources are re-solved for the new
+     association through the ONE `solve()` dispatcher.
+
+Representation: a cross-cell problem is a stacked (C, N) `SystemParams`
+whose row c holds every device's gain *to cell c*; an association is an
+(N,) int array. Cell c's solvable view is the full N-device row with
+``active[c, n] = (assign[n] == c)`` (`SystemParams.with_assignment`) —
+the PR 4 masking machinery makes each lane solve exactly its members
+bit-identically, and every association the loop visits reuses one
+compiled (C, N) shape.
+
+A proposed reassignment is accepted only if the realized global objective
+(sum of per-cell weighted objectives) strictly improves, so the accepted
+objective sequence is non-increasing by construction and the loop
+terminates at a fixed point (no proposal, or a rejected one).
+
+All outer-loop bookkeeping (cost matrices, greedy assignment) is
+host-side float64 numpy with stable sorts — bit-deterministic across
+runs, and off the device stream.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accuracy import AccuracyModel, default_accuracy
+from repro.core.bcd import initial_allocation
+from repro.core.types import SystemParams
+
+from .config import AssocConfig, AssocResult
+
+Array = jnp.ndarray
+
+_TINY_RATE = 1e-12   # same guards as core.energy.t_trans / t_cmp
+_TINY_FREQ = 1e-9
+_TINY_BAND = 1e-9
+
+
+def _base_active(sysb: SystemParams) -> np.ndarray:
+    """(N,) bool: devices that exist at all. A stacked base mask marks a
+    device inactive only if NO cell could serve it (all-False column)."""
+    N = int(jnp.asarray(sysb.gain).shape[1])
+    if sysb.active is None:
+        return np.ones(N, dtype=bool)
+    return np.asarray(sysb.active).any(axis=0)
+
+
+def _scal(sysb: SystemParams, name: str, C: int) -> np.ndarray:
+    """Per-cell scalar leaf as a host (C, 1) float64 column."""
+    v = np.asarray(getattr(sysb, name), np.float64)
+    return np.broadcast_to(v.reshape(-1, 1) if v.ndim else v.reshape(1, 1),
+                           (C, 1))
+
+
+def marginal_costs(sysb: SystemParams, warr: np.ndarray, acc: AccuracyModel,
+                   alloc, assign: np.ndarray) -> np.ndarray:
+    """(C, N) marginal weighted cost of serving device n at cell c.
+
+    The estimate a device n weighs when shopping for a cell c: an equal
+    bandwidth share of c's spectrum among its current members (excluding n
+    itself), full power/frequency, and n's current resolution from its
+    serving cell's solve — i.e. eqs. (1)-(11) evaluated at the prospective
+    operating point, combined with cell c's weights:
+
+        cost = R_g (w1 (E_tx + E_cmp) + w2 (T_tx + T_cmp)) - rho a(s_n)
+
+    This is a *proposal* heuristic only — the accept/reject step judges the
+    re-solved objective, so an imperfect estimate can never regress the
+    realized objective.
+    """
+    g = np.asarray(sysb.gain, np.float64)                     # (C, N)
+    C, N = g.shape
+    active = _base_active(sysb)
+    cyc = np.asarray(sysb.cycles, np.float64)
+    smp = np.asarray(sysb.samples, np.float64)
+    bits = np.asarray(sysb.bits, np.float64)
+
+    # device n's current resolution, read from its serving cell's lane
+    res = np.asarray(alloc.resolution, np.float64)            # (C, N)
+    s_dev = res[np.clip(assign, 0, C - 1), np.arange(N)]      # (N,)
+
+    served = active & (assign >= 0)
+    load = np.bincount(assign[served], minlength=C)           # (C,)
+    member = assign[None, :] == np.arange(C)[:, None]         # (C, N)
+    share = load[:, None] - member + 1.0                      # n joins cell c
+    b = _scal(sysb, "bandwidth_total", C) / share
+    p = _scal(sysb, "p_max", C)
+    n0 = _scal(sysb, "noise_psd", C)
+    r = b * np.log2(1.0 + g * p / (n0 * np.maximum(b, _TINY_BAND)))
+    t_tx = bits / np.maximum(r, _TINY_RATE)
+    e_tx = p * t_tx
+
+    zeta = 1.0 / _scal(sysb, "s_standard", C) ** 2
+    cycles_rt = _scal(sysb, "local_iters", C) * zeta \
+        * s_dev[None, :] ** 2 * cyc * smp
+    f = _scal(sysb, "f_max", C)
+    t_cp = cycles_rt / np.maximum(f, _TINY_FREQ)
+    e_cp = _scal(sysb, "kappa", C) * cycles_rt * f ** 2
+
+    a_dev = np.asarray(acc.value(jnp.asarray(s_dev)), np.float64)[None, :]
+    rg = _scal(sysb, "global_rounds", C)
+    w = np.asarray(warr, np.float64).reshape(C, 3)
+    cost = rg * (w[:, :1] * (e_tx + e_cp) + w[:, 1:2] * (t_tx + t_cp)) \
+        - w[:, 2:3] * a_dev
+    return cost
+
+
+def greedy_assign(cost: np.ndarray, capacity: np.ndarray,
+                  active: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Capacity-capped greedy: devices (in `order`) each take their
+    cheapest cell with remaining capacity. Stable sorts throughout, so the
+    result is bit-deterministic. Raises if capacity cannot cover every
+    active device."""
+    C, N = cost.shape
+    pref = np.argsort(cost, axis=0, kind="stable")            # (C, N)
+    assign = np.full(N, -1, dtype=np.int32)
+    load = np.zeros(C, dtype=np.int64)
+    for n in order:
+        if not active[n]:
+            continue
+        for c in pref[:, n]:
+            if load[c] < capacity[c]:
+                assign[n] = c
+                load[c] += 1
+                break
+        else:
+            raise ValueError(
+                "greedy_assign: per-cell capacities cannot serve every "
+                "active device (sum(capacity) < active count)")
+    return assign
+
+
+def nearest_assignment(sysb: SystemParams, capacity: np.ndarray
+                       ) -> np.ndarray:
+    """The static baseline: every device takes its strongest-gain cell
+    (capacity-capped; strongest achievable devices place first)."""
+    cost = -np.asarray(sysb.gain, np.float64)
+    active = _base_active(sysb)
+    order = np.argsort(cost.min(axis=0), kind="stable")
+    return greedy_assign(cost, capacity, active, order)
+
+
+def _cell_objectives(sysb: SystemParams, warr, acc: AccuracyModel,
+                     alloc) -> np.ndarray:
+    """(C,) realized per-cell weighted objective of `alloc` under the
+    masked system — eq. (12) per cell, empty cells contribute exactly 0."""
+    from repro.core.energy import total_accuracy, total_energy, total_time
+
+    def one(sysc, alloc_c, w_c):
+        e = total_energy(sysc, alloc_c)
+        t = total_time(sysc, alloc_c)
+        a = total_accuracy(acc, alloc_c, sysc.active)
+        return w_c[0] * e + w_c[1] * t - w_c[2] * a
+
+    return np.asarray(jax.vmap(one)(sysb, alloc, jnp.asarray(warr)),
+                      np.float64)
+
+
+def _warm_init(prev_alloc, cold_alloc, assign: np.ndarray,
+               proposal: np.ndarray, C: int):
+    """Warm start for the re-solve of `proposal`: lanes of devices that
+    kept their cell reuse the previous solution; moved (and masked) lanes
+    take the cold init of the new masked system (a moved device's old lane
+    falls back to the masked start B=0, p=pmax, f=fmax, s=s_lo)."""
+    from repro.core.types import Allocation
+
+    stay = jnp.asarray((proposal == assign) & (proposal >= 0))
+    keep = (jnp.asarray(proposal)[None, :]
+            == jnp.arange(C)[:, None]) & stay[None, :]          # (C, N)
+
+    def mix(prev, cold):
+        return jnp.where(keep, jnp.asarray(prev), jnp.asarray(cold))
+
+    return Allocation(
+        bandwidth=mix(prev_alloc.bandwidth, cold_alloc.bandwidth),
+        power=mix(prev_alloc.power, cold_alloc.power),
+        freq=mix(prev_alloc.freq, cold_alloc.freq),
+        resolution=mix(prev_alloc.resolution, cold_alloc.resolution),
+        s_relaxed=None if prev_alloc.s_relaxed is None
+        else mix(prev_alloc.s_relaxed, cold_alloc.resolution),
+        T=prev_alloc.T)   # (C,): SP1 re-derives T on the first BCD step
+
+
+def solve_assoc(problem, spec=None, assign0: Optional[np.ndarray] = None
+                ) -> AssocResult:
+    """Run the BCD-over-association outer loop on a stacked (C, N) problem.
+
+    This is the driver behind ``solve(Problem(..., assoc=AssocConfig()))``;
+    call it directly to seed a specific initial association (`assign0`,
+    e.g. a previous result's fixed point). The inner per-cell solves go
+    through the one `solve()` dispatcher — a `Problem.mesh` shards them
+    over the region mesh unchanged.
+    """
+    from repro.api import Problem, SolverSpec, solve
+
+    spec = SolverSpec() if spec is None else spec
+    if spec.max_iters < 1:
+        raise ValueError(
+            "solve_assoc: the association loop scores re-solved objectives,"
+            " so SolverSpec.max_iters must be >= 1")
+    cfg = problem.assoc if problem.assoc is not None else AssocConfig()
+    sysb = problem.system
+    if jnp.ndim(sysb.gain) != 2:
+        raise ValueError(
+            "solve_assoc: association needs a stacked (C, N) system whose "
+            "row c holds every device's gain to cell c (assoc.make_multicell)")
+    C, N = (int(d) for d in jnp.asarray(sysb.gain).shape)
+    acc = problem.acc if problem.acc is not None else default_accuracy()
+    active = _base_active(sysb)
+    capacity = cfg.per_cell_capacity(C, N)
+    if int(capacity.sum()) < int(active.sum()):
+        raise ValueError(
+            f"solve_assoc: sum(capacity) = {int(capacity.sum())} cannot "
+            f"serve {int(active.sum())} active devices")
+
+    from repro.api.problem import weights_leaf
+    warr = np.asarray(weights_leaf(problem.weights, np.float64, cells=C))
+
+    def run(masked: SystemParams, init=None):
+        res = solve(Problem(system=masked, weights=problem.weights,
+                            acc=acc, init=init, mesh=problem.mesh), spec)
+        fleet = res.fleet if hasattr(res, "fleet") else res
+        return res, fleet
+
+    if assign0 is None:
+        assign = nearest_assignment(sysb, capacity)
+    else:
+        assign = np.asarray(assign0, np.int32).copy()
+        load = np.bincount(assign[active & (assign >= 0)], minlength=C)
+        if (load > capacity).any() or (active & (assign < 0)).any():
+            raise ValueError("solve_assoc: assign0 is infeasible (capacity "
+                             "overrun or unserved active device)")
+
+    masked = sysb.with_assignment(jnp.asarray(assign))
+    res, fleet = run(masked)
+    obj = float(_cell_objectives(masked, warr, acc, fleet.allocation).sum())
+    objectives, moves = [obj], []
+
+    converged = False
+    attempted = 0
+    for _ in range(cfg.outer_iters):
+        attempted += 1
+        cost = marginal_costs(masked, warr, acc, fleet.allocation, assign)
+        cur = cost[np.clip(assign, 0, C - 1), np.arange(N)]
+        best = cost.min(axis=0)
+        order = np.argsort(-(cur - best), kind="stable")   # biggest saver first
+        proposal = greedy_assign(cost, capacity, active, order)
+        if np.array_equal(proposal, assign):
+            converged = True
+            break
+        new_masked = sysb.with_assignment(jnp.asarray(proposal))
+        init = None
+        if cfg.warm_start:
+            cold = jax.vmap(initial_allocation)(new_masked)
+            init = _warm_init(fleet.allocation, cold, assign, proposal, C)
+        new_res, new_fleet = run(new_masked, init=init)
+        new_obj = float(_cell_objectives(new_masked, warr, acc,
+                                         new_fleet.allocation).sum())
+        if new_obj < obj:
+            moves.append(int(np.sum(proposal != assign)))
+            assign, masked = proposal, new_masked
+            res, fleet, obj = new_res, new_fleet, new_obj
+            objectives.append(obj)
+        else:
+            converged = True   # the greedy proposal no longer helps
+            break
+    else:
+        # outer_iters == 0 never proposes: the init IS the fixed point asked
+        converged = cfg.outer_iters == 0
+
+    return AssocResult(assignment=assign, fleet=res, objective=obj,
+                       objectives=objectives, moves=moves,
+                       outer_iters=attempted, converged=converged)

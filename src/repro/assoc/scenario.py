@@ -1,0 +1,97 @@
+"""Geometry-consistent multi-cell scenarios for cross-cell association.
+
+`make_fleet` draws C *independent* cells — fine for batched serving, but
+cross-cell association needs one shared geometry: every device has a gain
+to EVERY cell, correlated through its position. `make_multicell` builds
+that stacked (C, N) system: devices uniform over the region, base stations
+on a grid (`bs_grid`), row c = expected pathloss+shadowing gain of all N
+devices to cell c, device attributes (cycles/samples/bits) shared across
+rows, per-cell scalars broadcast (or overridden per cell).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import (device_positions, make_system, pathloss_db,
+                                shadowing_sigma)
+from repro.core.types import SystemParams
+
+Array = jnp.ndarray
+
+
+def bs_grid(n_cells: int, area_m: float, dtype=jnp.float32) -> Array:
+    """(C, 2) base-station positions on a centered square grid covering
+    [-area/2, area/2]^2 (C=1 puts the single BS at the origin, matching
+    the paper's single-cell layout)."""
+    if n_cells < 1:
+        raise ValueError("bs_grid: n_cells must be >= 1")
+    g = int(np.ceil(np.sqrt(n_cells)))
+    idx = np.arange(n_cells)
+    xs = ((idx % g) + 0.5) / g * area_m - area_m / 2.0
+    ys = ((idx // g) + 0.5) / g * area_m - area_m / 2.0
+    return jnp.asarray(np.stack([xs, ys], axis=-1), dtype)
+
+
+def cross_gains(positions: Array, bs_xy: Array,
+                shadowing_db: float) -> Array:
+    """(..., C, N) expected gains of devices at `positions` (..., N, 2) to
+    base stations `bs_xy` (C, 2) — pathloss with the lognormal shadowing
+    mean folded in, exactly `channel.expected_gain`'s model."""
+    positions = jnp.asarray(positions)
+    bs_xy = jnp.asarray(bs_xy, positions.dtype)
+    d = jnp.linalg.norm(positions[..., None, :, :]
+                        - bs_xy[:, None, :], axis=-1)       # (..., C, N)
+    sigma = shadowing_sigma(shadowing_db)
+    shadow_mean = jnp.exp(jnp.asarray(sigma, positions.dtype) ** 2 / 2.0)
+    return 10.0 ** (-pathloss_db(d) / 10.0) * shadow_mean
+
+
+def make_multicell(key: jax.Array, n_cells: int, n_devices: int,
+                   area_m: float = 1000.0,
+                   positions: Optional[Array] = None,
+                   **overrides) -> SystemParams:
+    """Stacked (C, N) system over one shared device geometry.
+
+    Any `make_system` scalar override may also be a length-C sequence to
+    make the cells heterogeneous (e.g. ``bandwidth_total=[10e6, 40e6]`` —
+    the capacity pressure that makes association bite). Device attributes
+    are drawn once and shared across rows.
+    """
+    per_cell = {}
+    for k, v in list(overrides.items()):
+        if isinstance(v, (list, tuple, np.ndarray)) and k != "resolutions" \
+                and np.ndim(v) > 0:
+            vals = [float(x) for x in np.asarray(v).ravel()]
+            if len(vals) != n_cells:
+                raise ValueError(
+                    f"make_multicell: per-cell override {k!r} has "
+                    f"{len(vals)} entries for {n_cells} cells")
+            per_cell[k] = vals
+            del overrides[k]
+    kp, ka = jax.random.split(key)
+    base = make_system(ka, n_devices=n_devices, area_m=area_m, **overrides)
+    if positions is None:
+        positions = device_positions(kp, n_devices, area_m)
+    dtype = jnp.asarray(base.gain).dtype
+    bs = bs_grid(n_cells, area_m, dtype)
+    gain = cross_gains(jnp.asarray(positions, dtype), bs,
+                       float(overrides.get("shadowing_db", 8.0)))
+
+    def col(name):
+        if name in per_cell:
+            return jnp.asarray(per_cell[name], dtype)
+        return jnp.full((n_cells,), getattr(base, name), dtype)
+
+    rep = lambda x: jnp.broadcast_to(jnp.asarray(x), (n_cells, n_devices))
+    return SystemParams(
+        gain=gain, cycles=rep(base.cycles), samples=rep(base.samples),
+        bits=rep(base.bits),
+        bandwidth_total=col("bandwidth_total"), noise_psd=col("noise_psd"),
+        p_min=col("p_min"), p_max=col("p_max"), f_min=col("f_min"),
+        f_max=col("f_max"), kappa=col("kappa"),
+        local_iters=col("local_iters"), global_rounds=col("global_rounds"),
+        resolutions=base.resolutions, s_standard=col("s_standard"))

@@ -100,6 +100,39 @@ class SystemParams:
     def replace(self, **kw) -> "SystemParams":
         return dataclasses.replace(self, **kw)
 
+    # ---------------------------------------------------- per-cell views
+    def cell(self, c: int, xp=jnp) -> "SystemParams":
+        """Single-cell view of a stacked (C, N) system: row `c` of every
+        leaf (arrays AND per-cell scalars). `xp=np` keeps the view on the
+        host (the region planning idiom)."""
+        if jnp.ndim(self.gain) != 2:
+            raise ValueError("SystemParams.cell: system is not stacked (C, N)")
+        take = {k: xp.asarray(getattr(self, k))[c]
+                for k in _SYS_ARRAYS + _SYS_SCALARS}
+        act = None if self.active is None else xp.asarray(self.active)[c]
+        return SystemParams(**take, resolutions=self.resolutions, active=act)
+
+    def with_assignment(self, assign, xp=jnp) -> "SystemParams":
+        """Cross-cell active views under a device -> cell assignment.
+
+        For a stacked (C, N) system whose row c holds every device's
+        channel gain *to cell c*, an association is an (N,) int array
+        (`assign[n]` = serving cell, -1 = unserved). The returned system
+        carries ``active[c, n] = (assign[n] == c) & base_active[c, n]`` —
+        the same masking machinery that makes padded solves bit-identical
+        to unpadded ones (`region.batch.pad_system`) now makes each cell's
+        lane solve exactly its member devices, at ONE compiled (C, N)
+        shape for every association the outer loop visits."""
+        if jnp.ndim(self.gain) != 2:
+            raise ValueError(
+                "SystemParams.with_assignment: system is not stacked (C, N)")
+        C = int(jnp.asarray(self.gain).shape[0])
+        assign = xp.asarray(assign)
+        mask = assign[None, :] == xp.arange(C)[:, None]
+        if self.active is not None:
+            mask = mask & xp.asarray(self.active)
+        return self.replace(active=mask)
+
 
 @dataclasses.dataclass(frozen=True)
 class Weights:

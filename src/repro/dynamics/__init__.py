@@ -11,10 +11,17 @@ Public API:
     run_rounds                               one cell, R rounds, one scan
     run_rounds_fleet                         vmapped across stacked cells
     staleness_of, queue_step                 participation-model primitives
+    MobilityConfig, MobilityTrace            mobility traces (RWP /
+    simulate_mobility, replay_mobility       Gauss-Markov) + the handover
+                                             churn replay hook
 """
 from .config import ROUND_COLS, RoundsConfig, RoundsResult
 from .engine import run_rounds, run_rounds_fleet
+from .mobility import (MobilityConfig, MobilityTrace, replay_mobility,
+                       simulate_mobility, trace_gains)
 from .participation import queue_step, staleness_of
 
 __all__ = ["ROUND_COLS", "RoundsConfig", "RoundsResult", "run_rounds",
-           "run_rounds_fleet", "queue_step", "staleness_of"]
+           "run_rounds_fleet", "queue_step", "staleness_of",
+           "MobilityConfig", "MobilityTrace", "simulate_mobility",
+           "replay_mobility", "trace_gains"]

@@ -1,0 +1,295 @@
+"""Mobility traces: moving devices, per-cell gains, handover churn.
+
+The region serving stack so far re-requests cells under iid Poisson
+arrivals; real load comes from *movement* — devices walk, their pathloss
+to every base station drifts, their strongest cell changes, and each
+handover invalidates the warm-start cache of BOTH cells involved. This
+module generates that load:
+
+  * position models (one jitted `lax.scan` each, seeded and
+    bit-deterministic per key/dtype):
+      - `"rwp"` — random waypoint: pick a uniform waypoint, walk to it at
+        a uniform speed, repeat;
+      - `"gauss_markov"` — AR(1) velocity (memory `alpha`), walls
+        reflecting;
+  * gain mapping: positions -> distance to every `bs_grid` station ->
+    pathloss (128.1 + 37.6 log10 d_km) with AR(1) lognormal shadowing
+    (`drift_rho`, the Gudmundson model `channel.drift_shadowing`);
+  * event streams: per-step serving cell (argmax gain) and handover flags.
+
+`replay_mobility` drives a `RegionAllocator` (or anything with the same
+submit/solve/invalidate surface) with the trace: handovers flow in as
+warm-cache invalidations (`service.invalidate`), every non-empty cell
+re-requests with its members' realized gains, and the measured hit rate /
+re-solve cost under movement comes back as a summary dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import drift_shadowing, pathloss_db, shadowing_sigma
+from repro.core.types import SystemParams
+
+Array = jnp.ndarray
+
+_MODELS = ("rwp", "gauss_markov")
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityConfig:
+    """Static (hashable) knobs of a mobility trace — the jit key of the
+    trace scan, like `RoundsConfig` for the rounds engine.
+
+    model : "rwp" (random waypoint) or "gauss_markov" (AR(1) velocity).
+    steps / dt : trace length R and seconds per step.
+    area_m : side of the centered square region (devices stay inside).
+    v_min, v_max : waypoint leg speeds (rwp), m/s.
+    alpha / v_sigma : Gauss-Markov velocity memory and asymptotic per-axis
+        speed std (m/s).
+    shadowing_db : lognormal shadowing std in dB (0 = pure pathloss).
+    drift_rho : per-step AR(1) correlation of the shadowing state.
+    """
+    model: str = "rwp"
+    steps: int = 50
+    dt: float = 1.0
+    area_m: float = 1000.0
+    v_min: float = 0.5
+    v_max: float = 2.0
+    alpha: float = 0.85
+    v_sigma: float = 1.5
+    shadowing_db: float = 8.0
+    drift_rho: float = 0.9
+
+    def __post_init__(self):
+        if self.model not in _MODELS:
+            raise ValueError(f"MobilityConfig: model must be one of "
+                             f"{_MODELS}, got {self.model!r}")
+        if self.steps < 1:
+            raise ValueError("MobilityConfig: steps must be >= 1")
+        if not (0.0 < self.v_min <= self.v_max):
+            raise ValueError("MobilityConfig: need 0 < v_min <= v_max")
+        if not (0.0 <= self.alpha <= 1.0 and 0.0 <= self.drift_rho <= 1.0):
+            raise ValueError("MobilityConfig: alpha/drift_rho in [0, 1]")
+        if self.dt <= 0 or self.area_m <= 0 or self.v_sigma < 0 \
+                or self.shadowing_db < 0:
+            raise ValueError("MobilityConfig: dt/area_m/v_sigma/"
+                             "shadowing_db out of range")
+
+
+@dataclasses.dataclass
+class MobilityTrace:
+    """One realized trace. Rows are post-step snapshots r = 0..R-1."""
+    positions: Array   # (R, N, 2) meters, centered region
+    gains: Array       # (R, C, N) realized linear gains to every cell
+    serving: Array     # (R, N) int32 argmax-gain serving cell
+    handover: Array    # (R, N) bool, serving changed vs previous row
+    bs_xy: Array       # (C, 2) base-station positions
+
+    @property
+    def steps(self) -> int:
+        return int(self.positions.shape[0])
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.gains.shape[1])
+
+
+# ------------------------------------------------------------ position scans
+
+def _rwp_positions(key: jax.Array, n: int, cfg: MobilityConfig,
+                   dtype) -> Array:
+    half = cfg.area_m / 2.0
+    k0, k1, k2, ks = jax.random.split(key, 4)
+    u = lambda k, shape: jax.random.uniform(k, shape, dtype)
+    pos0 = (u(k0, (n, 2)) - 0.5) * cfg.area_m
+    wp0 = (u(k1, (n, 2)) - 0.5) * cfg.area_m
+    v0 = cfg.v_min + (cfg.v_max - cfg.v_min) * u(k2, (n,))
+    tiny = jnp.asarray(1e-12, dtype)
+
+    def step(carry, kr):
+        pos, wp, v = carry
+        kw, kv = jax.random.split(kr)
+        delta = wp - pos
+        dist = jnp.linalg.norm(delta, axis=-1)
+        leg = v * jnp.asarray(cfg.dt, dtype)
+        frac = jnp.minimum(leg, dist) / jnp.maximum(dist, tiny)
+        pos = pos + delta * frac[:, None]
+        arrive = dist <= leg
+        wp = jnp.where(arrive[:, None], (jax.random.uniform(
+            kw, (n, 2), dtype) - 0.5) * cfg.area_m, wp)
+        v = jnp.where(arrive, cfg.v_min + (cfg.v_max - cfg.v_min)
+                      * jax.random.uniform(kv, (n,), dtype), v)
+        pos = jnp.clip(pos, -half, half)
+        return (pos, wp, v), pos
+
+    _, trace = jax.lax.scan(step, (pos0, wp0, v0),
+                            jax.random.split(ks, cfg.steps))
+    return trace
+
+
+def _gm_positions(key: jax.Array, n: int, cfg: MobilityConfig,
+                  dtype) -> Array:
+    half = jnp.asarray(cfg.area_m / 2.0, dtype)
+    k0, kv, ks = jax.random.split(key, 3)
+    pos0 = (jax.random.uniform(k0, (n, 2), dtype) - 0.5) * cfg.area_m
+    v0 = cfg.v_sigma * jax.random.normal(kv, (n, 2), dtype)
+    a = jnp.asarray(cfg.alpha, dtype)
+    sig = jnp.asarray(cfg.v_sigma * np.sqrt(max(1.0 - cfg.alpha ** 2, 0.0)),
+                      dtype)
+
+    def step(carry, kr):
+        pos, v = carry
+        v = a * v + sig * jax.random.normal(kr, (n, 2), dtype)
+        nxt = pos + v * jnp.asarray(cfg.dt, dtype)
+        hit = (nxt > half) | (nxt < -half)
+        nxt = jnp.where(nxt > half, 2.0 * half - nxt, nxt)
+        nxt = jnp.where(nxt < -half, -2.0 * half - nxt, nxt)
+        nxt = jnp.clip(nxt, -half, half)   # extreme overshoot guard
+        v = jnp.where(hit, -v, v)          # reflect the wall component
+        return (nxt, v), nxt
+
+    _, trace = jax.lax.scan(step, (pos0, v0),
+                            jax.random.split(ks, cfg.steps))
+    return trace
+
+
+# ------------------------------------------------------------ gains / events
+
+def _shadow_states(key: jax.Array, steps: int, shape, rho, dtype) -> Array:
+    """(R, *shape) AR(1) standard-normal shadowing states (row 0 is the
+    stationary draw; `drift_shadowing` keeps the law N(0, 1) per step)."""
+    k0, ks = jax.random.split(key)
+    x0 = jax.random.normal(k0, shape, dtype)
+
+    def step(x, kr):
+        x2 = drift_shadowing(kr, x, rho)
+        return x2, x2
+
+    _, xs = jax.lax.scan(step, x0, jax.random.split(ks, steps - 1))
+    return jnp.concatenate([x0[None], xs], axis=0)
+
+
+def trace_gains(key: jax.Array, positions: Array, bs_xy: Array,
+                cfg: MobilityConfig) -> Array:
+    """(R, C, N) realized gains: pathloss at each step's distances times
+    AR(1)-correlated lognormal shadowing per (cell, device) link."""
+    positions = jnp.asarray(positions)
+    dtype = positions.dtype
+    bs_xy = jnp.asarray(bs_xy, dtype)
+    d = jnp.linalg.norm(positions[:, None, :, :]
+                        - bs_xy[None, :, None, :], axis=-1)   # (R, C, N)
+    base = 10.0 ** (-pathloss_db(d) / 10.0)
+    if cfg.shadowing_db == 0.0:
+        return base
+    R, C, N = d.shape
+    x = _shadow_states(key, R, (C, N), cfg.drift_rho, dtype)
+    sigma = jnp.asarray(shadowing_sigma(cfg.shadowing_db), dtype)
+    return base * jnp.exp(sigma * x)
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "dtype"))
+def _trace_impl(key, bs_xy, n: int, cfg: MobilityConfig, dtype: str):
+    dt = jnp.dtype(dtype)
+    kp, kg = jax.random.split(key)
+    mover = _rwp_positions if cfg.model == "rwp" else _gm_positions
+    pos = mover(kp, n, cfg, dt)
+    gains = trace_gains(kg, pos, bs_xy, cfg)
+    serving = jnp.argmax(gains, axis=1).astype(jnp.int32)     # (R, N)
+    prev = jnp.concatenate([serving[:1], serving[:-1]], axis=0)
+    handover = serving != prev                                # row 0 False
+    return pos, gains, serving, handover
+
+
+def simulate_mobility(key: jax.Array, n_devices: int, n_cells: int = 1,
+                      cfg: Optional[MobilityConfig] = None,
+                      bs_xy: Optional[Array] = None,
+                      dtype: str = "float32") -> MobilityTrace:
+    """Generate one mobility trace: R steps of N devices across C cells.
+
+    Same key (and cfg/dtype) -> bit-identical positions, gains, serving
+    cells, and handover streams, every run — the whole pipeline is one
+    jitted scan keyed by the PRNG key. `bs_xy` defaults to the centered
+    `assoc.bs_grid` layout.
+    """
+    cfg = cfg if cfg is not None else MobilityConfig()
+    if bs_xy is None:
+        from repro.assoc.scenario import bs_grid
+        bs_xy = bs_grid(n_cells, cfg.area_m, jnp.dtype(dtype))
+    bs_xy = jnp.asarray(bs_xy, jnp.dtype(dtype))
+    if bs_xy.shape != (n_cells, 2):
+        raise ValueError(f"simulate_mobility: bs_xy must be ({n_cells}, 2),"
+                         f" got {bs_xy.shape}")
+    pos, gains, serving, handover = _trace_impl(key, bs_xy, int(n_devices),
+                                                cfg, str(dtype))
+    return MobilityTrace(positions=pos, gains=gains, serving=serving,
+                         handover=handover, bs_xy=bs_xy)
+
+
+# ------------------------------------------------------------ serving replay
+
+def replay_mobility(service, trace: MobilityTrace, base: SystemParams,
+                    w=None) -> dict:
+    """Drive a region serving front-end with a mobility trace.
+
+    Per step: cells whose member set changed since the previous step (either
+    side of a handover) are invalidated (`service.invalidate` ->
+    `handover_purges`), then every non-empty cell re-requests an allocation
+    with its members' realized gains. `base` is a single-cell
+    `SystemParams` carrying the N devices' attributes (cycles/samples/bits
+    and the cell scalars, reused for every cell); `w` optionally overrides
+    the service's default weights per request.
+
+    Returns the churn summary: handover counts, purges, warm-cache hit
+    rate, mean warm/cold re-solve iterations, and the compiled shapes.
+    """
+    from repro.region.admission import AllocationRequest
+
+    serving = np.asarray(trace.serving)
+    gains = np.asarray(trace.gains)
+    R, C, N = gains.shape
+    if base.n != N:
+        raise ValueError(f"replay_mobility: base system has {base.n} "
+                         f"devices, trace has {N}")
+    host = {k: np.asarray(getattr(base, k))
+            for k in ("cycles", "samples", "bits")}
+    warm_iters, cold_iters = [], []
+    handovers = 0
+    for r in range(R):
+        if r:
+            moved = np.nonzero(serving[r] != serving[r - 1])[0]
+            handovers += int(moved.size)
+            touched = set(serving[r - 1][moved].tolist()) \
+                | set(serving[r][moved].tolist())
+            for cid in sorted(touched):
+                service.invalidate(int(cid))
+        reqs = []
+        for cid in range(C):
+            members = np.nonzero(serving[r] == cid)[0]
+            if members.size == 0:
+                continue
+            sysc = base.replace(
+                gain=gains[r, cid, members],
+                cycles=host["cycles"][members],
+                samples=host["samples"][members],
+                bits=host["bits"][members], active=None)
+            reqs.append(AllocationRequest(cell_id=cid, sys=sysc, w=w))
+        for resp in service.solve(reqs).values():
+            (warm_iters if resp.warm else cold_iters).append(int(resp.iters))
+    s = service.stats
+    return dict(
+        steps=R, cells=C, devices=N, handovers=handovers,
+        handover_purges=int(s.get("handover_purges", 0)),
+        requests=int(s["requests"]),
+        hit_rate=s["cache_hits"] / max(s["requests"], 1),
+        warm_solves=len(warm_iters), cold_solves=len(cold_iters),
+        mean_warm_iters=float(np.mean(warm_iters)) if warm_iters
+        else float("nan"),
+        mean_cold_iters=float(np.mean(cold_iters)) if cold_iters
+        else float("nan"),
+        compiled_shapes=sorted(service.compiled_shapes))

@@ -146,6 +146,27 @@ def _region_solve_impl(sys_batch, warr, init, tol, acc: AccuracyModel,
                      out_specs=P("cells"), check_rep=False)(*args)
 
 
+@partial(jax.jit, static_argnames=("acc", "max_iters", "sp2_method",
+                                   "sp2_iters", "mesh", "lockstep"))
+def _region_fixed_impl(sys_batch, warr, T_round, alloc0, tol,
+                       acc: AccuracyModel, max_iters: int, sp2_method: str,
+                       sp2_iters: int, mesh: Mesh, lockstep: bool):
+    """Deadline-constrained sibling of `_region_solve_impl`: the vmapped
+    `_fleet_fixed_cell_fn` under shard_map. The per-cell per-round deadline
+    `T_round` (C,) is a traced, cell-sharded operand — heterogeneous
+    budgets share this one jit cache entry."""
+    from repro.core.bcd import _fleet_fixed_cell_fn
+
+    fn = _fleet_fixed_cell_fn(acc, max_iters, tol, sp2_method, sp2_iters)
+    vf = jax.vmap(fn)
+    args = (sys_batch, warr, T_round, alloc0)
+    if lockstep or mesh.devices.size == 1:
+        return vf(*args)
+    in_specs = tuple(cell_specs(a) for a in args)
+    return shard_map(vf, mesh=mesh, in_specs=in_specs,
+                     out_specs=P("cells"), check_rep=False)(*args)
+
+
 def _pack_stats(fleet: FleetResult) -> Array:
     """Per-shard convergence stats packed into one (4,) device array; the
     host transfer happens lazily in RegionResult.stats."""
@@ -165,7 +186,8 @@ def _slice_fleet(fleet: FleetResult, n_cells: int) -> FleetResult:
     return FleetResult(
         allocation=jax.tree_util.tree_map(cut, fleet.allocation),
         objective=cut(fleet.objective), iters=cut(fleet.iters),
-        converged=cut(fleet.converged), history=cut(fleet.history))
+        converged=cut(fleet.converged), history=cut(fleet.history),
+        columns=fleet.columns)
 
 
 def allocate_region(sys_batch: SystemParams, w: Weights,

@@ -88,7 +88,8 @@ class RegionPipeline:
         self._dirty: Dict[Hashable, int] = {}   # in-flight cell -> count
         self._unclaimed: List[PendingResponse] = []
         self.stats = dict(requests=0, batches=0, cache_hits=0,
-                          cache_misses=0, cells_padded=0, shapes=set())
+                          cache_misses=0, cells_padded=0,
+                          handover_purges=0, shapes=set())
 
     # ------------------------------------------------------------ streaming
     def submit(self, request: AllocationRequest,
@@ -140,6 +141,20 @@ class RegionPipeline:
             self._in_flight.append(batch)
             dispatched.append(batch)
         return dispatched
+
+    def invalidate(self, cell_id: Hashable) -> bool:
+        """Handover invalidation: drop `cell_id`'s warm-start entry (its
+        member set changed under mobility, so the cached solution maps to
+        the wrong devices — a same-size pool would otherwise warm-hit with
+        a stale mapping). A batch still in flight for the cell is
+        materialized first so its store cannot resurrect the stale entry.
+        Returns whether an entry was dropped; `stats["handover_purges"]`
+        mirrors the cache counter."""
+        while self._in_flight and cell_id in self._dirty:
+            self._materialize(self._in_flight[0])
+        purged = self.cache.purge(cell_id)
+        self.stats["handover_purges"] = self.cache.handover_purges
+        return purged
 
     def drain(self, now: Optional[float] = None) -> List[CellResponse]:
         """Force-close everything queued, materialize everything in flight,

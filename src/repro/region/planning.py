@@ -69,6 +69,7 @@ class WarmStartCache:
         self.misses = 0
         self.resize_purges = 0
         self.evictions = 0
+        self.handover_purges = 0
 
     def lookup(self, cell_id: Hashable, n: int) -> Optional[Allocation]:
         """The cell's cached solution if still pool-compatible, else None
@@ -86,6 +87,17 @@ class WarmStartCache:
         self._entries.move_to_end(cell_id)
         self.hits += 1
         return cached[1]
+
+    def purge(self, cell_id: Hashable) -> bool:
+        """Drop a cell's entry outright (mobility handover: the member set
+        changed, so the cached solution maps to the wrong devices — even a
+        same-size pool must cold-start). Counted in `handover_purges`;
+        returns whether an entry was actually dropped."""
+        if cell_id in self._entries:
+            del self._entries[cell_id]
+            self.handover_purges += 1
+            return True
+        return False
 
     def store(self, cell_id: Hashable, n: int, alloc: Allocation) -> None:
         self._entries[cell_id] = (int(n), alloc)

@@ -133,6 +133,13 @@ class RegionAllocator:
             self.pipeline.submit(r)
         return {r.cell_id: r for r in self.pipeline.drain()}
 
+    def invalidate(self, cell_id: Hashable) -> bool:
+        """Drop a cell's warm-start cache entry (mobility handover: the
+        member set changed, so its cached solution no longer maps to the
+        pool). The next request for the cell cold-starts; the purge is
+        counted in `stats["handover_purges"]`."""
+        return self.pipeline.invalidate(cell_id)
+
     # -------------------------------------------------------------- stats
     @property
     def stats(self) -> dict:

@@ -1,6 +1,28 @@
 """Test-suite configuration: enable x64 up front so module ordering cannot
 change solver/kernel dtypes mid-suite (the allocator tests need f64
-bisections; kernels pin their own compute dtypes)."""
+bisections; kernels pin their own compute dtypes).
+
+Hypothesis (optional — property tests skip without it) runs under named
+profiles: "ci" is fully pinned (derandomized, no deadline, bounded
+examples) so the quick CI job is reproducible run-to-run; "dev" keeps
+random exploration locally but drops the per-example deadline, which jit
+compilation on first draw would always blow. Select with
+HYPOTHESIS_PROFILE=ci (the quick CI job does)."""
+import os
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci", derandomize=True, deadline=None, max_examples=20,
+        suppress_health_check=list(HealthCheck))
+    settings.register_profile(
+        "dev", deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

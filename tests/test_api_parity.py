@@ -301,8 +301,14 @@ def test_dispatcher_rejects_bad_combinations():
         solve(Problem(system=sysp, weights=W, rounds=RoundsConfig(rounds=2)))
     with pytest.raises(ValueError, match="stacked"):
         solve(Problem(system=sysp, weights=W, mesh=region_mesh()))
-    with pytest.raises(NotImplementedError, match="mesh"):
-        solve(Problem(system=fleet, weights=W, deadline=100.0,
+    # mesh + deadline used to be NotImplementedError; it now shards the
+    # fixed-deadline fleet solve (parity-tested in tests/test_region.py)
+    reg = solve(Problem(system=fleet, weights=W, deadline=100.0,
+                        mesh=region_mesh()), SolverSpec(max_iters=2))
+    assert reg.stats["cells"] == 2
+    # a deadline on a single cell still cannot take a mesh
+    with pytest.raises(ValueError, match="stacked"):
+        solve(Problem(system=sysp, weights=W, deadline=100.0,
                       mesh=region_mesh()))
     with pytest.raises(ValueError, match="cell axis"):
         solve(Problem(system=sysp, weights=[W, W]))

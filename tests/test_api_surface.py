@@ -30,6 +30,10 @@ EXPECTED_ALL = {
     # dynamics / region
     "RoundsConfig", "RoundsResult", "AllocationRequest", "CellResponse",
     "RegionAllocator", "RegionResult", "region_mesh",
+    # cross-cell association + mobility churn (PR 7)
+    "AssocConfig", "AssocResult", "solve_assoc", "make_multicell",
+    "MobilityConfig", "MobilityTrace", "simulate_mobility",
+    "replay_mobility",
     # region serving pipeline (admission policies + async futures)
     "RegionPipeline", "PendingResponse", "StageClocks",
     "CloseOnFull", "MaxWait", "DeadlineSlack",

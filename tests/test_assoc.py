@@ -1,0 +1,262 @@
+"""Property harness for the cross-cell association outer loop.
+
+The BCD-over-association loop has sharp invariants, checked here both
+deterministically and (when hypothesis is installed) property-style over
+random scenarios:
+
+  * partition — every active device is served by exactly one cell;
+  * capacity — per-cell caps are never exceeded;
+  * descent — the accepted global weighted objective is non-increasing
+    across outer iterations (the accept/reject construction);
+  * fixed point — re-running from a converged assignment does not move it;
+  * degeneration — outer_iters=0 reproduces the fixed-association fleet
+    solve of the initial (static nearest) assignment bit-identically.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro import (AssocConfig, Problem, SolverSpec, Weights, solve,
+                   solve_assoc)
+from repro.assoc import make_multicell, nearest_assignment
+from repro.assoc.loop import _base_active, greedy_assign, marginal_costs
+
+W = Weights(0.5, 0.5, 5.0)
+SPEC = SolverSpec(max_iters=6, tol=1e-5)
+
+
+def _scenario(seed=0, C=3, N=24, **kw):
+    kw.setdefault("bandwidth_total", [5e6 * (c + 1) for c in range(C)])
+    return make_multicell(jax.random.PRNGKey(seed), n_cells=C, n_devices=N,
+                          **kw)
+
+
+def _alloc_equal(a, b):
+    eq = jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)
+    return all(jax.tree_util.tree_leaves(eq))
+
+
+def _check_invariants(sysb, res, capacity=None):
+    C, N = np.asarray(sysb.gain).shape
+    assign = np.asarray(res.assignment)
+    active = _base_active(sysb)
+    # partition: every active device in exactly one cell, inactive unserved
+    assert assign.shape == (N,)
+    assert ((assign >= 0) & (assign < C))[active].all()
+    assert (assign[~active] == -1).all()
+    # capacity respected
+    load = np.bincount(assign[active], minlength=C)
+    cap = AssocConfig(capacity=capacity).per_cell_capacity(C, N) \
+        if capacity is not None else np.full(C, N)
+    assert (load <= cap).all(), (load, cap)
+    # monotone accepted objective, finite
+    objs = np.asarray(res.objectives)
+    assert np.isfinite(objs).all()
+    assert (np.diff(objs) < 0).all()   # accepted only on strict improvement
+    assert res.objective == objs[-1]
+
+
+# ---------------------------------------------------------------------------
+# deterministic invariant checks
+# ---------------------------------------------------------------------------
+
+def test_assoc_partition_and_capacity():
+    sysb = _scenario()
+    res = solve_assoc(Problem(system=sysb, weights=W,
+                              assoc=AssocConfig(outer_iters=6)), SPEC)
+    _check_invariants(sysb, res)
+
+
+def test_assoc_capacity_caps_bind():
+    C, N = 3, 24
+    sysb = _scenario(C=C, N=N)
+    cap = -(-N // C) + 1   # tight-ish per-cell cap
+    res = solve_assoc(Problem(system=sysb, weights=W,
+                              assoc=AssocConfig(outer_iters=6,
+                                                capacity=cap)), SPEC)
+    _check_invariants(sysb, res, capacity=cap)
+
+
+def test_assoc_capacity_infeasible_raises():
+    sysb = _scenario(C=3, N=24)
+    with pytest.raises(ValueError, match="capacity"):
+        solve_assoc(Problem(system=sysb, weights=W,
+                            assoc=AssocConfig(capacity=(3, 3, 3))), SPEC)
+
+
+def test_assoc_objective_monotone_and_improves():
+    """On a bandwidth-heterogeneous region, BCD-over-association beats the
+    static nearest-gain baseline (= objectives[0])."""
+    sysb = _scenario(seed=1, C=3, N=32)
+    res = solve_assoc(Problem(system=sysb, weights=W,
+                              assoc=AssocConfig(outer_iters=8)), SPEC)
+    _check_invariants(sysb, res)
+    if res.moves:   # a move was accepted -> strict win over the baseline
+        assert res.objective < res.objectives[0]
+
+
+def test_assoc_fixed_point_stable_under_rerun():
+    sysb = _scenario(seed=2)
+    cfg = AssocConfig(outer_iters=10, warm_start=False)
+    p = Problem(system=sysb, weights=W, assoc=cfg)
+    run1 = solve_assoc(p, SPEC)
+    assert run1.converged
+    run2 = solve_assoc(p, SPEC, assign0=run1.assignment)
+    assert np.array_equal(run2.assignment, run1.assignment)
+    assert run2.moves == []
+    assert run2.objective == pytest.approx(run1.objective)
+
+
+def test_assoc_outer0_bitparity_with_fleet_solve():
+    """assoc disabled (outer_iters=0) IS the fixed-association fleet solve
+    of the nearest assignment — bit-identical allocations."""
+    sysb = _scenario(seed=3)
+    res = solve_assoc(Problem(system=sysb, weights=W,
+                              assoc=AssocConfig(outer_iters=0)), SPEC)
+    assert res.converged and res.outer_iters == 0
+    cap = AssocConfig().per_cell_capacity(*np.asarray(sysb.gain).shape)
+    assert np.array_equal(res.assignment, nearest_assignment(sysb, cap))
+    masked = sysb.with_assignment(jnp.asarray(res.assignment))
+    direct = solve(Problem(system=masked, weights=W), SPEC)
+    assert _alloc_equal(res.fleet.allocation, direct.allocation)
+    assert np.array_equal(np.asarray(res.fleet.iters),
+                          np.asarray(direct.iters))
+
+
+def test_assoc_routes_through_solve_dispatcher():
+    sysb = _scenario(seed=4)
+    cfg = AssocConfig(outer_iters=4, warm_start=False)
+    via_solve = solve(Problem(system=sysb, weights=W, assoc=cfg), SPEC)
+    direct = solve_assoc(Problem(system=sysb, weights=W, assoc=cfg), SPEC)
+    assert np.array_equal(via_solve.assignment, direct.assignment)
+    assert via_solve.objectives == direct.objectives
+    assert _alloc_equal(via_solve.fleet.allocation, direct.fleet.allocation)
+
+
+def test_assoc_validation_errors():
+    sysb = _scenario()
+    single = sysb.cell(0)
+    with pytest.raises(ValueError, match="stacked"):
+        solve(Problem(system=single, weights=W, assoc=AssocConfig()), SPEC)
+    with pytest.raises(ValueError, match="exclusive"):
+        solve(Problem(system=sysb, weights=W, assoc=AssocConfig(),
+                      deadline=100.0), SPEC)
+    with pytest.raises(ValueError, match="max_iters"):
+        solve(Problem(system=sysb, weights=W, assoc=AssocConfig()),
+              SolverSpec(max_iters=0))
+    with pytest.raises(ValueError, match="outer_iters"):
+        AssocConfig(outer_iters=-1)
+
+
+def test_with_assignment_mask_semantics():
+    sysb = _scenario(C=3, N=8)
+    assign = np.array([0, 1, 2, 0, 1, 2, -1, 0], np.int32)
+    masked = sysb.with_assignment(assign)
+    act = np.asarray(masked.active)
+    assert act.shape == (3, 8)
+    for n, c in enumerate(assign):
+        col = np.zeros(3, bool)
+        if c >= 0:
+            col[c] = True
+        assert np.array_equal(act[:, n], col)
+    # composes with an existing base mask
+    base = sysb.replace(active=jnp.zeros((3, 8), bool).at[:, :4].set(True))
+    act2 = np.asarray(base.with_assignment(assign).active)
+    assert not act2[:, 4:].any()
+
+
+def test_cell_view_indexes_every_leaf():
+    sysb = _scenario(C=3, N=8)
+    c1 = sysb.cell(1)
+    assert np.asarray(c1.gain).shape == (8,)
+    assert np.array_equal(np.asarray(c1.gain), np.asarray(sysb.gain)[1])
+    assert float(c1.bandwidth_total) == float(
+        np.asarray(sysb.bandwidth_total)[1])
+    assert c1.resolutions == sysb.resolutions
+    # a single-cell view is solvable as-is
+    r = solve(Problem(system=c1, weights=W), SolverSpec(max_iters=2))
+    assert r.iters == 2
+
+
+def test_greedy_assign_deterministic_and_capped():
+    rng = np.random.default_rng(0)
+    cost = rng.standard_normal((4, 20))
+    cap = np.array([5, 5, 5, 5])
+    active = np.ones(20, bool)
+    order = np.arange(20)
+    a1 = greedy_assign(cost, cap, active, order)
+    a2 = greedy_assign(cost, cap, active, order)
+    assert np.array_equal(a1, a2)
+    assert (np.bincount(a1, minlength=4) <= cap).all()
+
+
+def test_marginal_costs_shape_and_finiteness():
+    sysb = _scenario(C=3, N=16)
+    cap = AssocConfig().per_cell_capacity(3, 16)
+    assign = nearest_assignment(sysb, cap)
+    masked = sysb.with_assignment(jnp.asarray(assign))
+    fleet = solve(Problem(system=masked, weights=W), SPEC)
+    from repro.api.problem import weights_leaf
+    from repro.core.accuracy import default_accuracy
+    warr = np.asarray(weights_leaf(W, np.float64, cells=3))
+    cost = marginal_costs(masked, warr, default_accuracy(),
+                          fleet.allocation, assign)
+    assert cost.shape == (3, 16)
+    assert np.isfinite(cost).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property suite (skips when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_cells=st.integers(min_value=2, max_value=4),
+       n_devices=st.integers(min_value=6, max_value=24))
+def test_property_association_invariants(seed, n_cells, n_devices):
+    """Partition + capacity + monotone descent over random scenarios."""
+    sysb = make_multicell(jax.random.PRNGKey(seed), n_cells=n_cells,
+                          n_devices=n_devices)
+    res = solve_assoc(Problem(system=sysb, weights=W,
+                              assoc=AssocConfig(outer_iters=4)),
+                      SolverSpec(max_iters=4, tol=1e-4))
+    _check_invariants(sysb, res)
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_property_capacity_never_exceeded(seed):
+    rng = np.random.default_rng(seed)
+    C, N = 4, 20
+    cost = rng.standard_normal((C, N))
+    cap = rng.integers(5, N, size=C)
+    while cap.sum() < N:
+        cap[rng.integers(C)] += 1
+    assign = greedy_assign(cost, cap, np.ones(N, bool), np.arange(N))
+    assert (assign >= 0).all()
+    assert (np.bincount(assign, minlength=C) <= cap).all()
+
+
+@settings(max_examples=5)
+@given(seed=st.integers(min_value=0, max_value=2 ** 10))
+def test_property_fixed_point_rerun(seed):
+    sysb = make_multicell(jax.random.PRNGKey(seed), n_cells=3, n_devices=12)
+    cfg = AssocConfig(outer_iters=8, warm_start=False)
+    p = Problem(system=sysb, weights=W, assoc=cfg)
+    spec = SolverSpec(max_iters=4, tol=1e-4)
+    run1 = solve_assoc(p, spec)
+    if not run1.converged:
+        return   # cap hit before the fixed point; nothing to re-run
+    run2 = solve_assoc(p, spec, assign0=run1.assignment)
+    assert np.array_equal(run2.assignment, run1.assignment)

@@ -1,0 +1,133 @@
+"""Mobility-trace determinism and handover-churn replay.
+
+Traces are jitted scans keyed only by a PRNG key and a static config, so
+the same key must produce bit-identical positions / gains / serving /
+handover streams — in f32 and f64, single-cell and fleet-stacked, for
+both waypoint models. Replay drives the traces through RegionAllocator
+and must keep the handover-purge ledger consistent.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import (MobilityConfig, RegionAllocator, SolverSpec, Weights,
+                   make_system, replay_mobility, simulate_mobility)
+from repro.assoc import bs_grid
+from repro.dynamics.mobility import trace_gains
+
+W = Weights(0.5, 0.5, 1.0)
+
+
+def _cfg(model, **kw):
+    kw.setdefault("steps", 6)
+    return MobilityConfig(model=model, **kw)
+
+
+@pytest.mark.parametrize("model", ["rwp", "gauss_markov"])
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+@pytest.mark.parametrize("n_cells", [1, 4])
+def test_trace_bit_determinism(model, dtype, n_cells):
+    key = jax.random.PRNGKey(7)
+    kw = dict(n_devices=10, n_cells=n_cells, cfg=_cfg(model), dtype=dtype)
+    t1 = simulate_mobility(key, **kw)
+    t2 = simulate_mobility(key, **kw)
+    for name in ("positions", "gains", "serving", "handover"):
+        a, b = np.asarray(getattr(t1, name)), np.asarray(getattr(t2, name))
+        assert np.array_equal(a, b), name
+    assert np.asarray(t1.positions).dtype == np.dtype(dtype)
+    # a different key must actually move the sample
+    t3 = simulate_mobility(jax.random.PRNGKey(8), **kw)
+    assert not np.array_equal(np.asarray(t1.positions),
+                              np.asarray(t3.positions))
+
+
+@pytest.mark.parametrize("model", ["rwp", "gauss_markov"])
+def test_trace_shapes_and_invariants(model):
+    cfg = _cfg(model, steps=8, area_m=500.0)
+    tr = simulate_mobility(jax.random.PRNGKey(3), n_devices=12, n_cells=3,
+                           cfg=cfg)
+    R, C, N = cfg.steps, 3, 12
+    assert np.asarray(tr.positions).shape == (R, N, 2)
+    assert np.asarray(tr.gains).shape == (R, C, N)
+    assert np.asarray(tr.serving).shape == (R, N)
+    assert np.asarray(tr.handover).shape == (R, N)
+    assert tr.steps == R and tr.n_cells == C
+    # positions never leave the arena
+    assert (np.abs(np.asarray(tr.positions)) <= cfg.area_m / 2 + 1e-6).all()
+    # gains positive and finite; serving is the argmax cell
+    g = np.asarray(tr.gains)
+    assert np.isfinite(g).all() and (g > 0).all()
+    sv = np.asarray(tr.serving)
+    assert ((sv >= 0) & (sv < C)).all()
+    assert np.array_equal(sv, g.argmax(axis=1))
+    # handover stream: row 0 is all-False, later rows flag serving changes
+    ho = np.asarray(tr.handover)
+    assert not ho[0].any()
+    assert np.array_equal(ho[1:], sv[1:] != sv[:-1])
+
+
+def test_trace_gains_shadowing_off_is_pure_pathloss():
+    cfg = _cfg("rwp", shadowing_db=0.0)
+    key = jax.random.PRNGKey(0)
+    pos = jnp.zeros((2, 5, 2))
+    bs = bs_grid(2, 1000.0)
+    g = np.asarray(trace_gains(key, pos, bs, cfg))
+    # identical positions in both rows -> identical deterministic gains
+    assert np.array_equal(g[0], g[1])
+
+
+def test_mobility_config_validation():
+    with pytest.raises(ValueError, match="model"):
+        MobilityConfig(model="teleport")
+    with pytest.raises(ValueError, match="steps"):
+        MobilityConfig(steps=0)
+    with pytest.raises(ValueError, match="v_max"):
+        MobilityConfig(v_min=3.0, v_max=2.0)
+    with pytest.raises(ValueError, match="alpha"):
+        MobilityConfig(alpha=1.5)
+    with pytest.raises(ValueError):
+        simulate_mobility(jax.random.PRNGKey(0), n_devices=4, n_cells=2,
+                          bs_xy=jnp.zeros((3, 2)))
+
+
+def test_replay_handover_accounting():
+    """Handover churn through the region service: every handover purges at
+    most two warm entries, the purge counter matches the service ledger,
+    and the request count is steps x cells."""
+    cfg = _cfg("rwp", steps=5, dt=5.0, v_min=10.0, v_max=60.0)
+    tr = simulate_mobility(jax.random.PRNGKey(1), n_devices=20, n_cells=3,
+                           cfg=cfg)
+    base = make_system(jax.random.PRNGKey(2), n_devices=20)
+    svc = RegionAllocator(w=W, cells_per_batch=4, min_bucket=16,
+                          spec=SolverSpec(max_iters=6, tol=1e-4))
+    rep = replay_mobility(svc, tr, base)
+    assert rep["steps"] == cfg.steps and rep["cells"] == 3
+    assert rep["requests"] == cfg.steps * 3
+    assert rep["handover_purges"] == svc.stats["handover_purges"]
+    assert rep["handover_purges"] <= 2 * rep["handovers"]
+    assert rep["warm_solves"] + rep["cold_solves"] == rep["requests"]
+    assert 0.0 <= rep["hit_rate"] <= 1.0
+    # one padded batch shape for the whole replay
+    assert len(rep["compiled_shapes"]) == 1
+
+
+def test_replay_no_motion_no_purges():
+    """A frozen trace (v=0 Gauss-Markov with no noise) never hands over,
+    so the warm cache is never invalidated and steps>1 all hit."""
+    cfg = MobilityConfig(model="gauss_markov", steps=4, alpha=1.0,
+                         v_sigma=0.0, shadowing_db=0.0)
+    tr = simulate_mobility(jax.random.PRNGKey(4), n_devices=12, n_cells=2,
+                           cfg=cfg)
+    assert not np.asarray(tr.handover).any()
+    base = make_system(jax.random.PRNGKey(5), n_devices=12)
+    svc = RegionAllocator(w=W, cells_per_batch=2, min_bucket=16,
+                          spec=SolverSpec(max_iters=4, tol=1e-4))
+    rep = replay_mobility(svc, tr, base)
+    assert rep["handovers"] == 0
+    assert rep["handover_purges"] == 0
+    assert rep["cold_solves"] == 2          # first step only
+    assert rep["warm_solves"] == (cfg.steps - 1) * 2

@@ -174,3 +174,37 @@ print("OK")
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded deadline solves (Figs. 8-9 variant under shard_map)
+# ---------------------------------------------------------------------------
+
+def test_mesh_deadline_matches_unsharded_fleet():
+    """solve(deadline=..., mesh=...) — previously NotImplementedError —
+    now shards `_solve_fixed_fleet` over cells and must agree bit for bit
+    with the unsharded path, for scalar and per-cell deadlines, in both
+    lockstep modes. C=6 exercises padding on non-dividing mesh sizes."""
+    from repro import Problem, SolverSpec, solve
+
+    fleet = _fleet(C=6, N=12, seed=7)
+    w = Weights(0.5, 0.5, 1.0)
+    spec = SolverSpec(max_iters=5, tol=1e-5)
+    per_cell = 120.0 + 10.0 * jnp.arange(6, dtype=jnp.float64)
+    for deadline in (150.0, per_cell):
+        base = solve(Problem(system=fleet, weights=w, deadline=deadline),
+                     spec)
+        for lockstep in (False, True):
+            reg = solve(Problem(system=fleet, weights=w, deadline=deadline,
+                                mesh=region_mesh()),
+                        SolverSpec(max_iters=5, tol=1e-5,
+                                   lockstep=lockstep))
+            for leaf, ref in zip(
+                    jax.tree_util.tree_leaves(reg.allocation),
+                    jax.tree_util.tree_leaves(base.allocation)):
+                np.testing.assert_array_equal(np.asarray(leaf),
+                                              np.asarray(ref))
+            np.testing.assert_array_equal(np.asarray(reg.iters),
+                                          np.asarray(base.iters))
+            assert reg.fleet.columns == base.columns   # fixed-T ledger kept
+            assert reg.stats["cells"] == 6

@@ -278,3 +278,45 @@ def test_stage_clocks_cover_all_four_layers():
     assert clocks["queue_wait_s"] == pytest.approx(34.0)
     for key in ("plan_s", "dispatch_s", "device_s", "gather_s"):
         assert clocks[key] > 0.0, key
+
+
+# ---------------------------------------------------------------------------
+# handover invalidation (mobility churn hook)
+# ---------------------------------------------------------------------------
+
+def test_handover_invalidate_purges_and_counts():
+    """invalidate() drops exactly the named cell's warm entry, counts it in
+    handover_purges (pipeline stats AND cache counter), and forces the next
+    request for that cell to re-solve cold."""
+    svc = RegionAllocator(W, cells_per_batch=2, min_bucket=8, spec=SPEC)
+    svc.solve([_req("a", 6, seed=1), _req("b", 6, seed=2)])
+    assert svc.stats["handover_purges"] == 0
+
+    assert svc.invalidate("a") is True
+    assert svc.invalidate("a") is False     # already gone: not double-counted
+    assert svc.invalidate("nope") is False  # unknown cell: a no-op
+    assert svc.stats["handover_purges"] == 1
+    assert svc.pipeline.cache.handover_purges == 1
+
+    res = svc.solve([_req("a", 6, seed=1, drift=0.01),
+                     _req("b", 6, seed=2, drift=0.01)])
+    assert not res["a"].warm                # purged -> cold re-solve
+    assert res["b"].warm                    # untouched cell stays warm
+
+
+def test_handover_invalidate_materializes_in_flight_batch():
+    """An invalidation racing an in-flight async batch must not let the
+    stale store resurrect: the pending batch is materialized first, then
+    purged, so the next solve is cold."""
+    pipe = _pipeline(cells_per_batch=1, max_in_flight=2)
+    pipe.submit(_req("x", 6, seed=9))
+    pipe.pump(force=True)
+    assert pipe._in_flight                  # batch launched, not gathered
+    assert pipe.invalidate("x") is True
+    assert not pipe._in_flight              # forced materialization
+    assert pipe.stats["handover_purges"] == 1
+    out = pipe.drain()
+    assert len(out) == 1 and out[0].cell_id == "x" and out[0].converged
+    pipe.submit(_req("x", 6, seed=9, drift=0.01))
+    resp = pipe.drain()[0]
+    assert not resp.warm
