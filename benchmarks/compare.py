@@ -1,13 +1,19 @@
 """Diff a fresh benchmark --json artifact against a committed baseline.
 
     PYTHONPATH=src python -m benchmarks.compare FRESH.json BASELINE.json \
-        [--factor 2.0] [--strict]
+        [--factor 2.0] [--latency-factor 1.15] [--strict]
 
 Rows are matched by name; a fresh row slower than `factor` x the baseline
 `us_per_call` emits a GitHub-Actions `::warning::` annotation (plain text on
 a terminal). Non-blocking by design: the exit code is always 0 — this is a
 perf-trajectory tripwire, not a gate (CI hosts differ from the recording
 host, so absolute walls drift; >2x on the same row is worth a look).
+
+Rows whose `derived` field carries `k=v;k=v` pairs get a second, tighter
+check: histogram-derived `p50_ms`/`p99_ms` values regressing beyond
+`latency_factor` (default 1.15) are flagged the same way. The latency
+histograms use ~7%-wide buckets (`repro.obs.DEFAULT_BOUNDS`), so bucket
+quantization alone can never trip the 15% gate.
 
 `--strict` flips that: exit 1 when any row regresses beyond the factor (or
 the artifacts are unreadable). It exists for the bench re-record protocol —
@@ -27,8 +33,24 @@ def load_rows(path: str) -> dict:
     return {r["name"]: r for r in data.get("rows", [])}
 
 
+def parse_derived(derived) -> dict:
+    """The numeric pairs of a `derived` string: "p50_ms=40;req_s=1027.1;
+    speedup_vs_sync=1.61x" -> {"p50_ms": 40.0, ...} (non-numeric and
+    bare-string parts are skipped)."""
+    out = {}
+    for part in str(derived or "").split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v.strip().rstrip("x"))
+        except ValueError:
+            pass
+    return out
+
+
 def compare(fresh_path: str, base_path: str, factor: float = 2.0,
-            strict: bool = False) -> int:
+            strict: bool = False, latency_factor: float = 1.15) -> int:
     try:
         fresh, base = load_rows(fresh_path), load_rows(base_path)
     except (OSError, ValueError, KeyError) as e:
@@ -56,6 +78,20 @@ def compare(fresh_path: str, base_path: str, factor: float = 2.0,
             status = "SLOW"
             print(f"::warning::bench row {name} regressed {ratio:.2f}x "
                   f"({b_us / 1e6:.2f}s -> {f_us / 1e6:.2f}s)")
+        # histogram-derived latency gate: p50/p99 regress beyond
+        # latency_factor (tighter than the wall tripwire — the fixed
+        # bucket layout makes these comparable run-to-run)
+        fd, bd = (parse_derived(fresh[name].get("derived")),
+                  parse_derived(base[name].get("derived")))
+        for key in ("p50_ms", "p99_ms"):
+            if key in fd and bd.get(key, 0.0) > 0.0:
+                lratio = fd[key] / bd[key]
+                if lratio > latency_factor:
+                    n_slow += 1
+                    status = "SLOW"
+                    print(f"::warning::bench row {name} {key} regressed "
+                          f"{lratio:.2f}x ({bd[key]:.0f}ms -> "
+                          f"{fd[key]:.0f}ms)")
         print(f"{name}: {ratio:.2f}x vs baseline [{status}]")
     only_base = sorted(set(base) - set(fresh))
     if only_base:
@@ -75,28 +111,37 @@ def compare(fresh_path: str, base_path: str, factor: float = 2.0,
 def main() -> None:
     args = sys.argv[1:]
     factor = 2.0
+    latency_factor = 1.15
     strict = "--strict" in args
     if strict:
         args.remove("--strict")
-    if "--factor" in args:
-        i = args.index("--factor")
+    for flag, default in (("--factor", factor),
+                          ("--latency-factor", latency_factor)):
+        if flag not in args:
+            continue
+        i = args.index(flag)
         try:
-            factor = float(args[i + 1])
+            value = float(args[i + 1])
         except (IndexError, ValueError):
             if strict:
                 # the gate must enforce the threshold the operator asked
-                # for — a silent 2.0 fallback would weaken it
-                sys.exit("benchmarks.compare: bad --factor value under "
+                # for — a silent fallback would weaken it
+                sys.exit(f"benchmarks.compare: bad {flag} value under "
                          "--strict")
-            print("::warning::benchmarks.compare: bad --factor value, "
-                  "using 2.0")
+            print(f"::warning::benchmarks.compare: bad {flag} value, "
+                  f"using {default}")
+            value = default
         args = args[:i] + args[i + 2:]
+        if flag == "--factor":
+            factor = value
+        else:
+            latency_factor = value
     if len(args) != 2:
         # still exit 0 unless --strict: must never break the CI pipeline
         print("::warning::usage: python -m benchmarks.compare FRESH.json "
-              "BASELINE.json [--factor F] [--strict]")
+              "BASELINE.json [--factor F] [--latency-factor L] [--strict]")
         sys.exit(1 if strict else 0)
-    sys.exit(compare(args[0], args[1], factor, strict))
+    sys.exit(compare(args[0], args[1], factor, strict, latency_factor))
 
 
 if __name__ == "__main__":

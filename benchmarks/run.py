@@ -7,6 +7,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's metric).
 ``--json PATH`` additionally writes the rows as a BENCH_*.json-style artifact
 for the perf trajectory (list of {name, us_per_call, derived} objects).
+``--metrics PATH`` writes the run's `repro.obs` metrics registry (latency
+histograms with derived p50/p90/p99) as metrics JSONL — the CI artifact.
 Scaled down from the paper's N=50/100-rep setup to run on one CPU core; the
 trends, not the absolute magnitudes, are the reproduction target
 (EXPERIMENTS.md compares against the paper's claims).
@@ -19,8 +21,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro import Problem, SolverSpec, Weights, make_fleet, make_system, solve
+from repro import (Problem, SolverSpec, Weights, make_fleet, make_system,
+                   obs, solve)
 from repro.core import total_energy, total_time
 from repro.core.baselines import comm_only, comp_only, min_pixel, rand_pixel, scheme1
 from repro.core.types import dbm_to_watt
@@ -35,6 +39,16 @@ def _row(name, t0, t1, derived, calls=1):
     us = (t1 - t0) / max(calls, 1) * 1e6
     _ROWS.append(dict(name=name, us_per_call=round(us), derived=str(derived)))
     print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def _lat_pcts(lat):
+    """p50/p99 of a latency sample through the repo's fixed-bucket
+    `repro.obs` Histogram — the same layout (and thus the same ~7%
+    quantization) as the live metrics and the compare.py gate, replacing
+    the ad-hoc np.percentile math the rows used to carry."""
+    h = obs.Histogram("lat")
+    h.observe_many(float(x) for x in lat)
+    return dict(p50=h.percentile(50), p99=h.percentile(99))
 
 
 def _mean_over_seeds(fn, reps=REPS):
@@ -517,9 +531,8 @@ def serve_latency():
         lat = done_t - np.asarray(arrivals)
         wall = float(np.max(done_t))
         assert len(alloc.shapes) <= 4, alloc.shapes
-        return dict(p50=float(np.percentile(lat, 50)),
-                    p99=float(np.percentile(lat, 99)),
-                    req_s=n_req / wall, wall=wall)
+        return dict(lat=lat, req_s=n_req / wall, wall=wall,
+                    **_lat_pcts(lat))
 
     def replay(arrivals, depth):
         p = pipe(depth)
@@ -553,9 +566,8 @@ def serve_latency():
         lat = done_t - np.asarray(arrivals)
         wall = float(np.max(done_t))
         assert len(p.compiled_shapes) <= 4, p.compiled_shapes
-        return dict(p50=float(np.percentile(lat, 50)),
-                    p99=float(np.percentile(lat, 99)),
-                    req_s=n_req / wall, wall=wall)
+        return dict(lat=lat, req_s=n_req / wall, wall=wall,
+                    **_lat_pcts(lat))
 
     # the pipelined drain wall calibrates the arrival span: arrivals must
     # outpace the FASTER path so both replays measure capacity, not the
@@ -574,12 +586,145 @@ def serve_latency():
         out_sync = replay_sync(arr)
         out_pipe = replay(arr, 2)
         for tag, out in (("sync", out_sync), ("pipelined", out_pipe)):
+            # metric plane: the same latencies land in the global registry
+            # so --metrics exports them with derived percentiles
+            obs.REGISTRY.histogram("serve_latency_seconds",
+                                   trace=trace_name, path=tag
+                                   ).observe_many(float(x)
+                                                  for x in out["lat"])
             extra = ""
             if tag == "pipelined":
                 speedup = out["req_s"] / out_sync["req_s"]
                 extra = f";speedup_vs_sync={speedup:.2f}x"
             t0 = time.time()
             _row(f"serve_latency.{trace_name}.{tag}.R{n_req}",
+                 t0, t0 + out["wall"],
+                 f"p50_ms={1e3 * out['p50']:.0f};"
+                 f"p99_ms={1e3 * out['p99']:.0f};"
+                 f"req_s={out['req_s']:.1f}{extra}")
+
+
+def obs_overhead():
+    """Telemetry overhead acceptance (the `repro.obs` rows): one saturated
+    serving trace replayed under three recorder arms — off (the default
+    no-op), on (a memory recorder), jsonl (a streaming `JsonlRecorder`) —
+    for Poisson and bursty arrivals. Rows carry req/s plus
+    histogram-derived p50/p99 and the enabled arms' measured slowdown vs
+    the off arm.
+
+    The hard gate is the *no-op* overhead: the measured per-call cost of
+    a disabled span/point site times the trace's telemetry site count
+    must stay under 2% of the off arm's wall time (asserted here and in
+    tests/test_obs.py). The enabled arms are informational — they pay for
+    real event capture."""
+    import os
+    import tempfile
+
+    from repro.region import AllocationRequest, MaxWait, RegionPipeline
+
+    n_req, cells_per_batch, min_bucket = 64, 8, 16
+    spec = SolverSpec(max_iters=8, tol=1e-4)
+    w = Weights(0.5, 0.5, 1.0)
+    sizes = [12, 24]
+    key = jax.random.PRNGKey(71)
+    systems = [make_system(jax.random.fold_in(key, i),
+                           n_devices=sizes[i % len(sizes)])
+               for i in range(n_req)]
+
+    def pipe():
+        return RegionPipeline(w, cells_per_batch=cells_per_batch,
+                              min_bucket=min_bucket, spec=spec,
+                              policy=MaxWait(0.02), max_in_flight=2)
+
+    def trace():
+        return [AllocationRequest(cell_id=i, sys=systems[i])
+                for i in range(n_req)]
+
+    def replay(arrivals):
+        p = pipe()
+        reqs = trace()
+        futs = [None] * n_req
+        done_t = np.full(n_req, np.nan)
+        open_idx = set(range(n_req))
+        i = 0
+        t0 = time.monotonic()
+        while open_idx:
+            now = time.monotonic() - t0
+            n_new = 0
+            while i < n_req and arrivals[i] <= now:
+                futs[i] = p.submit(reqs[i])
+                i += 1
+                n_new += 1
+            p.pump(force=(i >= n_req))
+            if i >= n_req and p.in_flight:
+                j = min(k for k in open_idx if futs[k].dispatched)
+                futs[j].result()
+            stamp = time.monotonic() - t0
+            resolved = [k for k in open_idx
+                        if futs[k] is not None and futs[k].done()]
+            for k in resolved:
+                done_t[k] = stamp
+                open_idx.discard(k)
+            if not resolved and not n_new and i < n_req:
+                time.sleep(5e-4)   # idle until the next arrival is due
+        lat = done_t - np.asarray(arrivals)
+        wall = float(np.max(done_t))
+        return dict(lat=lat, req_s=n_req / wall, wall=wall,
+                    **_lat_pcts(lat))
+
+    # compile the bucket menu + warm every cache outside the timed arms,
+    # then calibrate the arrival span off a saturated drain
+    replay(np.zeros(n_req))
+    t0 = time.monotonic()
+    replay(np.zeros(n_req))
+    span = 0.5 * (time.monotonic() - t0)
+
+    rng = np.random.RandomState(5)
+    ia = rng.exponential(1.0, n_req)
+    arrivals = dict(
+        poisson=np.cumsum(ia) * (span / np.sum(ia)),
+        bursty=np.repeat(np.arange(4), n_req // 4) * (span / 4))
+
+    # measured per-call cost of a DISABLED span/point site, and the site
+    # count of one enabled trace: together they bound the no-op overhead
+    reps = 20000
+    t0 = time.monotonic()
+    for _ in range(reps):
+        with obs.span("x"):
+            pass
+        obs.point("x")
+    per_site = (time.monotonic() - t0) / (2 * reps)
+    rec = obs.MemoryRecorder()
+    with obs.recording(rec):
+        replay(np.zeros(n_req))
+    n_sites = len(rec.events)
+
+    tmp = tempfile.mkdtemp(prefix="obs_overhead_")
+    for trace_name, arr in arrivals.items():
+        out_off = replay(arr)
+        with obs.recording(obs.MemoryRecorder()):
+            out_on = replay(arr)
+        with obs.recording(obs.JsonlRecorder(
+                os.path.join(tmp, f"{trace_name}.jsonl"))):
+            out_jsonl = replay(arr)
+
+        noop_overhead = n_sites * per_site / out_off["wall"]
+        assert noop_overhead < 0.02, (
+            f"no-op telemetry overhead {noop_overhead:.2%} "
+            f"({n_sites} sites x {per_site * 1e9:.0f}ns) >= 2%")
+
+        for tag, out in (("off", out_off), ("on", out_on),
+                         ("jsonl", out_jsonl)):
+            obs.REGISTRY.histogram("obs_overhead_latency_seconds",
+                                   trace=trace_name, recorder=tag
+                                   ).observe_many(float(x)
+                                                  for x in out["lat"])
+            extra = (f";noop_overhead_pct={100 * noop_overhead:.3f}"
+                     if tag == "off" else
+                     f";slowdown_vs_off="
+                     f"{out_off['req_s'] / out['req_s']:.2f}x")
+            t0 = time.time()
+            _row(f"obs_overhead.{trace_name}.{tag}.R{n_req}",
                  t0, t0 + out["wall"],
                  f"p50_ms={1e3 * out['p50']:.0f};"
                  f"p99_ms={1e3 * out['p99']:.0f};"
@@ -745,6 +890,7 @@ BENCHES = {
     "region": region_scale,
     "rounds": rounds_dynamics,
     "serve_latency": serve_latency,
+    "obs_overhead": obs_overhead,
     "assoc_mobility": assoc_mobility,
     "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,
@@ -761,6 +907,13 @@ def main() -> None:
             sys.exit("--json requires a path argument")
         json_path = args[i + 1]
         args = args[:i] + args[i + 2:]
+    metrics_path = None
+    if "--metrics" in args:
+        i = args.index("--metrics")
+        if i + 1 >= len(args):
+            sys.exit("--metrics requires a path argument")
+        metrics_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
     which = args or list(BENCHES)
     unknown = [n for n in which if n not in BENCHES]
     if unknown:
@@ -772,6 +925,9 @@ def main() -> None:
         with open(json_path, "w") as fh:
             json.dump(dict(rows=_ROWS, benches=which), fh, indent=1)
         print(f"# wrote {len(_ROWS)} rows to {json_path}", file=sys.stderr)
+    if metrics_path:
+        n = obs.write_metrics_jsonl(metrics_path)
+        print(f"# wrote {n} metrics to {metrics_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -40,7 +40,7 @@ from repro.core.accuracy import default_accuracy
 from repro.core.bcd import (_FIXED_COLS, _LEDGER_COLS, _allocate_fixed_impl,
                             _allocate_impl, _fleet_cell_fn, _fleet_result,
                             _init_carry_state, _materialize_history, BCDResult,
-                            initial_allocation)
+                            SolveCounters, initial_allocation)
 from repro.core.types import Allocation, SystemParams
 
 from .problem import Problem, weights_leaf
@@ -95,13 +95,41 @@ def _apply_dtype(system: SystemParams, init: Optional[Allocation],
 # the dispatcher
 # ---------------------------------------------------------------------------
 
+def _topology_label(problem: Problem) -> str:
+    """Deterministic topology tag for the solve span (shape metadata only —
+    reading `.ndim` never syncs the device)."""
+    if problem.assoc is not None:
+        return "assoc"
+    base = ("rounds" if problem.rounds is not None
+            else "fixed" if problem.deadline is not None else "bcd")
+    if problem.mesh is not None:
+        return base + "_region"
+    if jnp.asarray(problem.system.gain).ndim == 2:
+        return base + "_fleet"
+    return base
+
+
 def solve(problem: Problem, spec: Optional[SolverSpec] = None):
     """Solve one `Problem` under one `SolverSpec`; route on topology.
 
     Returns the per-topology result type (`BCDResult`, `FleetResult`,
     `RegionResult`, or `RoundsResult`) — bit-identical to the legacy entry
     point it replaces (parity-tested in tests/test_api_parity.py).
+
+    When a `repro.obs` recorder is enabled the whole call is wrapped in a
+    `solve` span tagged with the routed topology; with the default no-op
+    recorder this is one predicate check (see tests/test_obs.py for the
+    jit-cache guard: the span changes no compiled shapes either way).
     """
+    from repro import obs
+
+    if not obs.enabled():
+        return _solve_routed(problem, spec)
+    with obs.span("solve", topology=_topology_label(problem)):
+        return _solve_routed(problem, spec)
+
+
+def _solve_routed(problem: Problem, spec: Optional[SolverSpec]):
     spec = SolverSpec() if spec is None else spec
     cells = problem.cells   # also validates system.gain is 1-D or 2-D
     sysp, init = _apply_dtype(problem.system, problem.init, spec.dtype)
@@ -182,7 +210,7 @@ def _bcd_result(out, alloc0, spec: SolverSpec, cols, objective_col: str,
     both at ledger index of `objective_col`), and hand back the untouched
     init when max_iters=0 ran nothing (objective NaN, the PR 1 regression
     contract)."""
-    B, pw, f, s, s_hat, T, iters, conv, ledger = out
+    B, pw, f, s, s_hat, T, iters, conv, ledger, counters = out
     iters = int(iters)
     if spec.keep_history:
         history = _materialize_history(np.asarray(ledger), iters, cols)
@@ -195,7 +223,8 @@ def _bcd_result(out, alloc0, spec: SolverSpec, cols, objective_col: str,
                             s_relaxed=s_hat if with_s_relaxed else None,
                             T=T) if iters else alloc0
     return BCDResult(allocation=allocation, objective=objective,
-                     history=history, iters=iters, converged=bool(conv))
+                     history=history, iters=iters, converged=bool(conv),
+                     counters=SolveCounters(data=counters))
 
 
 def _solve_single(p: Problem, spec: SolverSpec, sysp, init) -> BCDResult:

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.accuracy import AccuracyModel, default_accuracy
 from repro.core.bcd import initial_allocation
 from repro.core.types import SystemParams
@@ -250,32 +251,37 @@ def solve_assoc(problem, spec=None, assign0: Optional[np.ndarray] = None
 
     converged = False
     attempted = 0
-    for _ in range(cfg.outer_iters):
+    for it in range(cfg.outer_iters):
         attempted += 1
-        cost = marginal_costs(masked, warr, acc, fleet.allocation, assign)
-        cur = cost[np.clip(assign, 0, C - 1), np.arange(N)]
-        best = cost.min(axis=0)
-        order = np.argsort(-(cur - best), kind="stable")   # biggest saver first
-        proposal = greedy_assign(cost, capacity, active, order)
-        if np.array_equal(proposal, assign):
-            converged = True
-            break
-        new_masked = sysb.with_assignment(jnp.asarray(proposal))
-        init = None
-        if cfg.warm_start:
-            cold = jax.vmap(initial_allocation)(new_masked)
-            init = _warm_init(fleet.allocation, cold, assign, proposal, C)
-        new_res, new_fleet = run(new_masked, init=init)
-        new_obj = float(_cell_objectives(new_masked, warr, acc,
-                                         new_fleet.allocation).sum())
-        if new_obj < obj:
-            moves.append(int(np.sum(proposal != assign)))
-            assign, masked = proposal, new_masked
-            res, fleet, obj = new_res, new_fleet, new_obj
-            objectives.append(obj)
-        else:
-            converged = True   # the greedy proposal no longer helps
-            break
+        # one obs span per outer association iteration: the inner re-solve's
+        # own "solve" span nests under it, so a trace attributes outer-loop
+        # time between proposal scoring and the re-solves
+        with obs.span("assoc_iter", outer_iter=it):
+            cost = marginal_costs(masked, warr, acc, fleet.allocation,
+                                  assign)
+            cur = cost[np.clip(assign, 0, C - 1), np.arange(N)]
+            best = cost.min(axis=0)
+            order = np.argsort(-(cur - best), kind="stable")   # biggest saver
+            proposal = greedy_assign(cost, capacity, active, order)
+            if np.array_equal(proposal, assign):
+                converged = True
+                break
+            new_masked = sysb.with_assignment(jnp.asarray(proposal))
+            init = None
+            if cfg.warm_start:
+                cold = jax.vmap(initial_allocation)(new_masked)
+                init = _warm_init(fleet.allocation, cold, assign, proposal, C)
+            new_res, new_fleet = run(new_masked, init=init)
+            new_obj = float(_cell_objectives(new_masked, warr, acc,
+                                             new_fleet.allocation).sum())
+            if new_obj < obj:
+                moves.append(int(np.sum(proposal != assign)))
+                assign, masked = proposal, new_masked
+                res, fleet, obj = new_res, new_fleet, new_obj
+                objectives.append(obj)
+            else:
+                converged = True   # the greedy proposal no longer helps
+                break
     else:
         # outer_iters == 0 never proposes: the init IS the fixed point asked
         converged = cfg.outer_iters == 0

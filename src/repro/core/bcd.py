@@ -41,7 +41,57 @@ Array = jnp.ndarray
 # against sp2.direct_eval_counts for the non-carried reference).
 _LEDGER_COLS = ("objective", "energy", "time", "accuracy",
                 "sp2_iters", "sp2_residual", "rel_step")
-_FIXED_COLS = ("energy", "time", "accuracy", "rel_step")
+_FIXED_COLS = ("energy", "time", "accuracy", "sp2_evals", "rel_step")
+
+# solver-effort counter order (SolveCounters.data last axis): BCD outer
+# iterations, SP1 dual (Sigma-lambda(T) candidate) evaluations, SP2 dual
+# evaluations (dE/dB evals for "direct" / Jong outer iterations for
+# "jong"), and the final relative-step convergence residual.
+_COUNTER_COLS = ("bcd_iters", "sp1_evals", "sp2_evals", "residual")
+
+
+@dataclasses.dataclass
+class SolveCounters:
+    """Device-resident solver-effort counters for one solve.
+
+    `data` is a `(len(columns),)` array for a single-cell solve, `(C,
+    len(columns))` for fleet/region results — computed inside the jitted
+    solve from the iteration ledger, so constructing this object adds no
+    host sync and no compiled shapes. Reading `as_dict()` (or numpy-ing
+    `data`) is the one deliberate device->host transfer; the serving hot
+    path never takes it. `repro.obs` feeds these into per-request events.
+    """
+    data: Array
+    columns: tuple = _COUNTER_COLS
+
+    def col(self, name: str) -> Array:
+        """One counter by name, still on device; leading cell axis kept."""
+        return self.data[..., self.columns.index(name)]
+
+    @property
+    def bcd_iters(self) -> Array:
+        return self.col("bcd_iters")
+
+    @property
+    def sp1_evals(self) -> Array:
+        return self.col("sp1_evals")
+
+    @property
+    def sp2_evals(self) -> Array:
+        return self.col("sp2_evals")
+
+    @property
+    def residual(self) -> Array:
+        return self.col("residual")
+
+    def as_dict(self) -> dict:
+        """{name: float | (C,) ndarray} — one blocking transfer."""
+        vals = np.asarray(self.data)
+        out = {}
+        for i, c in enumerate(self.columns):
+            v = vals[..., i]
+            out[c] = float(v) if v.ndim == 0 else v
+        return out
 
 
 @dataclasses.dataclass
@@ -51,6 +101,7 @@ class BCDResult:
     history: List[dict]
     iters: int
     converged: bool
+    counters: Optional[SolveCounters] = None
 
 
 @dataclasses.dataclass
@@ -67,6 +118,7 @@ class FleetResult:
     converged: Array         # (C,) bool
     history: Array           # (C, max_iters, len(columns))
     columns: tuple = _LEDGER_COLS
+    counters: Optional[SolveCounters] = None   # (C, 4) device counters
 
 
 def initial_allocation(sys: SystemParams, key: Optional[jax.Array] = None,
@@ -162,13 +214,42 @@ def _bcd_while(state0, max_iters: int, ncols: int, tol, step, mask=None):
     return (*state, k, conv, ledger)
 
 
+def _pack_counters(iters, ledger, max_iters: int, sp2_col: int,
+                   rel_col: int, sp1_per_iter: int):
+    """(len(_COUNTER_COLS),) device array of solver-effort counters,
+    reduced from the iteration ledger inside the traced solve — pure
+    device ops on values the ledger already carries, so surfacing the
+    counters adds no host syncs and no new compiled shapes.
+
+    `sp1_per_iter` is the statically-known SP1 dual-eval count per BCD
+    iteration (`sp1.dual_evals_per_iter`; 0 for the closed-form fixed-T
+    subproblem) — the sweep/bisect grids have fixed trip counts, so the
+    total is exactly `iters * sp1_per_iter`. NaN ledger rows (beyond
+    `iters`) drop out of the nansum; residual is the rel-step of the last
+    executed iteration (NaN when nothing ran)."""
+    dtype = ledger.dtype
+    it = iters.astype(dtype)
+    sp1 = it * sp1_per_iter
+    if max_iters > 0:
+        sp2 = jnp.nansum(ledger[:, sp2_col]).astype(dtype)
+        last = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
+        residual = jnp.where(iters > 0, ledger[last, rel_col], jnp.nan)
+    else:
+        sp2 = jnp.zeros((), dtype)
+        residual = jnp.full((), jnp.nan, dtype)
+    return jnp.stack([it, sp1, sp2, residual.astype(dtype)])
+
+
 @partial(jax.jit, static_argnames=("acc", "max_iters", "sp1_method",
                                    "sp2_method", "sp2_iters"))
 def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                    state0, max_iters: int, tol,
                    sp1_method: str, sp2_method: str, sp2_iters: int):
     """Device-resident Algorithm 2. Returns
-    (B, p, f, s, s_hat, T, iters, converged, ledger)."""
+    (B, p, f, s, s_hat, T, iters, converged, ledger, counters) — the
+    trailing `counters` is the packed `_COUNTER_COLS` effort vector."""
+    from .sp1 import dual_evals_per_iter
+
     dtype = state0[0].dtype
     warr_sp1 = jnp.stack([warr[0], jnp.maximum(warr[1], 1e-9), warr[2]])
     solve_sp1 = _SP1_IMPLS[sp1_method]
@@ -199,8 +280,13 @@ def _allocate_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                    sp2_it, sp2_res)
         return (B_new, p_new, f, s, s_hat, T), metrics
 
-    return _bcd_while(state0, max_iters, len(_LEDGER_COLS), tol, step,
-                      mask=sys.active)
+    out = _bcd_while(state0, max_iters, len(_LEDGER_COLS), tol, step,
+                     mask=sys.active)
+    counters = _pack_counters(out[6], out[8], max_iters,
+                              _LEDGER_COLS.index("sp2_iters"),
+                              _LEDGER_COLS.index("rel_step"),
+                              dual_evals_per_iter(sp1_method, acc))
+    return (*out, counters)
 
 
 def _materialize_history(ledger: np.ndarray, iters: int,
@@ -209,7 +295,7 @@ def _materialize_history(ledger: np.ndarray, iters: int,
     for i in range(iters):
         row = dict(iter=i + 1)
         for c, v in zip(cols, ledger[i]):
-            row[c] = int(v) if c == "sp2_iters" else float(v)
+            row[c] = int(v) if c in ("sp2_iters", "sp2_evals") else float(v)
         out.append(row)
     return out
 
@@ -286,10 +372,12 @@ def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
         tt_opt = _optimal_split(sys, s, B, T_round)
         rmin = sys.bits / tt_opt
         if sp2_method == "direct":
-            p_new, B_new, _ = _sp2_direct_impl(sys, rmin)
+            p_new, B_new, ev = _sp2_direct_impl(sys, rmin)
+            sp2_ev = ev.astype(dtype)
         else:
-            p_new, B_new, _, _, _, _ = _sp2_jong_core(
+            p_new, B_new, _, _, it2, _ = _sp2_jong_core(
                 sys, warr[0], rmin, p, B, max_iters=sp2_iters)
+            sp2_ev = it2.astype(dtype)
         # recompute f against the achieved transmission time
         tt_new = sys.bits / jnp.maximum(_rate(sys, B_new, p_new), 1e-12)
         cyc = sys.local_iters * sys.zeta * s ** 2 * sys.cycles * sys.samples
@@ -299,12 +387,19 @@ def _allocate_fixed_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
                            T=jnp.asarray(T_round, dtype))
         metrics = (en.total_energy(sys, alloc),
                    en.total_time(sys, alloc),
-                   en.total_accuracy(acc, alloc, sys.active))
+                   en.total_accuracy(acc, alloc, sys.active),
+                   sp2_ev)
         return (B_new, p_new, f, s, s_hat,
                 jnp.asarray(T_round, dtype)), metrics
 
-    return _bcd_while(state0, max_iters, len(_FIXED_COLS), tol, step,
-                      mask=sys.active)
+    # sp1_per_iter = 0: _solve_sp1_fixed_impl enumerates the discrete
+    # resolution menu in closed form — no dual search to count
+    out = _bcd_while(state0, max_iters, len(_FIXED_COLS), tol, step,
+                     mask=sys.active)
+    counters = _pack_counters(out[6], out[8], max_iters,
+                              _FIXED_COLS.index("sp2_evals"),
+                              _FIXED_COLS.index("rel_step"), 0)
+    return (*out, counters)
 
 
 def allocate_fixed_deadline(sys: SystemParams, w: Weights, T_total: float,
@@ -402,7 +497,7 @@ def _fleet_result(out, max_iters: int, dtype,
     `_allocate_fixed_impl`, with cols=_FIXED_COLS) outputs — all leaves
     carry a leading cell axis. Ledger column 0 is the per-iteration
     objective for both column sets ("objective" free / "energy" fixed)."""
-    B, p, f, s, s_hat, T, iters, conv, ledger = out
+    B, p, f, s, s_hat, T, iters, conv, ledger, counters = out
     if max_iters > 0:
         idx = jnp.clip(iters.astype(jnp.int32) - 1, 0, max_iters - 1)
         last = jnp.take_along_axis(ledger[..., 0], idx[:, None], axis=1)[:, 0]
@@ -414,7 +509,8 @@ def _fleet_result(out, max_iters: int, dtype,
                             T=T)
     return FleetResult(allocation=allocation, objective=objective,
                        iters=iters, converged=conv, history=ledger,
-                       columns=tuple(cols))
+                       columns=tuple(cols),
+                       counters=SolveCounters(data=counters))
 
 
 def allocate_fleet(sys_batch: SystemParams, w: Weights,

@@ -251,6 +251,27 @@ def _solve_sp1_sweep_impl(sys: SystemParams, warr: Array, acc: AccuracyModel,
 _SP1_IMPLS = {"sweep": _solve_sp1_sweep_impl, "bisect": _solve_sp1_impl}
 
 
+def dual_evals_per_iter(sp1_method: str, acc: AccuracyModel) -> int:
+    """SP1 Sigma-lambda(T) dual evaluations one BCD iteration spends,
+    counted at the candidate-deadline level (each evaluation inverts
+    lambda(T) — closed form for LinearAccuracy under "sweep", an
+    `_INNER_ITERS` bisection otherwise). Both engines have fixed trip
+    counts and the method/accuracy class are jit static args, so the
+    count is exact and known at trace time — `core.bcd` multiplies it by
+    the traced iteration count to form the device-resident `sp1_evals`
+    counter without adding any compiled work.
+
+    The +1 is the final lambda(T) inversion at the bracketing result
+    (the secant T for "sweep", the midpoint for "bisect")."""
+    if sp1_method == "sweep":
+        if isinstance(acc, LinearAccuracy):
+            return _SWEEP_POINTS * _SWEEP_ROUNDS + 1
+        return _SWEEP_POINTS_GENERIC * _SWEEP_ROUNDS_GENERIC + 1
+    if sp1_method == "bisect":
+        return _OUTER_ITERS + 1
+    raise ValueError(f"sp1_method must be sweep|bisect, got {sp1_method!r}")
+
+
 def solve_sp1(sys: SystemParams, w: Weights, acc: AccuracyModel,
               bandwidth: Array, power: Array, method: str = "sweep"
               ) -> Tuple[Array, Array, Array, Array]:

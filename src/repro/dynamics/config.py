@@ -15,9 +15,13 @@ from repro.core.types import Allocation
 
 Array = jnp.ndarray
 
-# per-round ledger column order (one row per global round)
+# per-round ledger column order (one row per global round). sp2_evals is
+# the round's SP2 dual-eval count from the solver's device counters
+# (`core.bcd._COUNTER_COLS`) — warm-started rounds should spend fewer
+# evals than a cold re-solve.
 ROUND_COLS = ("objective", "energy", "time", "accuracy", "arrived_frac",
-              "n_late", "n_dropped", "bcd_iters", "bcd_converged")
+              "n_late", "n_dropped", "bcd_iters", "bcd_converged",
+              "sp2_evals")
 
 _CHANNEL_MODES = ("static", "iid", "markov")
 _PARTICIPATION_MODES = ("full", "drop", "stale")

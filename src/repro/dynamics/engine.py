@@ -32,7 +32,8 @@ from jax import lax
 
 from repro.core import energy as en
 from repro.core.accuracy import AccuracyModel
-from repro.core.bcd import _allocate_impl, _init_carry_state, initial_allocation
+from repro.core.bcd import (_COUNTER_COLS, _allocate_impl, _init_carry_state,
+                            initial_allocation)
 from repro.core.channel import drift_shadowing, sample_gain, shadowing_to_gain
 from repro.core.types import Allocation, SystemParams, Weights
 
@@ -81,7 +82,7 @@ def _cell_engine(sys: SystemParams, warr: Array, acc: AccuracyModel,
         # (2) warm-started re-allocation (bcd_iters=0 keeps the carried init)
         state_in = state if cfg.warm_start else _init_carry_state(
             sys_r, initial_allocation(sys_r))
-        B, p, f, s, s_hat, T, iters, conv, _ = _allocate_impl(
+        B, p, f, s, s_hat, T, iters, conv, _, counters = _allocate_impl(
             sys_r, warr, acc, state_in, cfg.bcd_iters, cfg.bcd_tol,
             cfg.sp1_method, cfg.sp2_method, cfg.sp2_iters)
         state = (B, p, f, s, s_hat, T)
@@ -145,6 +146,11 @@ def _cell_engine(sys: SystemParams, warr: Array, acc: AccuracyModel,
             jnp.sum(~active).astype(dtype),
             iters.astype(dtype),
             conv.astype(dtype),
+            # per-round SP2 dual-eval effort from the solve's device
+            # counters (ROUND_COLS "sp2_evals"): attribution for the
+            # warm-start claim — re-allocation rounds should spend fewer
+            # evals than a cold solve
+            counters[_COUNTER_COLS.index("sp2_evals")],
         ])
         return (state, shadow, qw, qu), (row, code, g.astype(dtype), s)
 

@@ -1,0 +1,52 @@
+"""`repro.obs` — unified telemetry: spans, metrics, exporters, report.
+
+The subsystem has two independent planes, deliberately not exported from
+`repro.__all__` (import `repro.obs` directly):
+
+  * **event plane** (`recorder`): `span()` context managers and `point()`
+    events streamed to an installable `Recorder` (memory / JSONL). Off by
+    default — the no-op recorder makes every instrumentation site a
+    single predicate check, benchmarked < 2% of serve throughput.
+  * **metric plane** (`metrics` + `export`): always-on counters, gauges,
+    and fixed-bucket latency histograms in a global registry, exported
+    as Prometheus text or metrics JSONL.
+
+Device-resident solver counters (BCD iterations, SP1/SP2 dual evals,
+convergence residuals) live in `core/bcd.py` as a `counters` leaf of the
+jitted result pytree — they stay on device until someone reads them, add
+no host syncs and no compiled shapes, and the region/dynamics layers feed
+them into this module's per-request events when a recorder is enabled.
+
+Typical use::
+
+    from repro import obs
+
+    with obs.recording(obs.JsonlRecorder("events.jsonl")):
+        with obs.span("serve", trace="poisson"):
+            ... run the pipeline ...
+    # then: python -m repro.obs.report events.jsonl
+
+See `examples/serve_observed.py` for the end-to-end walkthrough.
+"""
+from .recorder import (
+    Recorder, NoopRecorder, MemoryRecorder, JsonlRecorder, NOOP,
+    enabled, get_recorder, set_recorder, recording,
+    span, point, strip_timing, read_jsonl,
+)
+from .metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
+    counter, gauge, histogram, DEFAULT_BOUNDS,
+)
+from .export import prometheus_text, metrics_jsonl, write_metrics_jsonl
+
+__all__ = [
+    # recorder / spans
+    "Recorder", "NoopRecorder", "MemoryRecorder", "JsonlRecorder", "NOOP",
+    "enabled", "get_recorder", "set_recorder", "recording",
+    "span", "point", "strip_timing", "read_jsonl",
+    # metrics
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "counter", "gauge", "histogram", "DEFAULT_BOUNDS",
+    # exporters
+    "prometheus_text", "metrics_jsonl", "write_metrics_jsonl",
+]

@@ -52,27 +52,96 @@ class AllocationRequest:
     priority: int = 0
 
 
-@dataclasses.dataclass
 class StageClocks:
-    """Aggregate wall time spent in each pipeline stage (seconds, except
-    `queue_wait_s`, which is in the admission clock's units — wall seconds
-    unless the caller drives `now` itself).
+    """Per-stage wall-time **samples** for the pipeline (seconds, except
+    the queue_wait stage, which is in the admission clock's units — wall
+    seconds unless the caller drives `now` itself).
 
-      queue_wait_s : sum over requests of (batch close - submit)
-      plan_s       : host-side pad/stack/warm-init batch assembly
-      dispatch_s   : host time to trace/enqueue the solve (async dispatch)
-      device_s     : dispatch -> compute observed ready (in-flight time;
-                     an upper bound measured at the first blocking poll)
-      gather_s     : device->host materialization of responses
-    """
-    queue_wait_s: float = 0.0
-    plan_s: float = 0.0
-    dispatch_s: float = 0.0
-    device_s: float = 0.0
-    gather_s: float = 0.0
+      queue_wait : per request, batch close - submit
+      plan       : per batch, host-side pad/stack/warm-init assembly
+      dispatch   : per batch, host time to trace/enqueue the solve
+      device     : per batch, dispatch -> compute observed ready (an upper
+                   bound measured at the batch's first blocking poll)
+      gather     : per batch, device->host materialization of responses
+
+    Stages record individual durations via `record(stage, dur)` — the raw
+    samples feed real latency distributions (`samples`, `histogram`,
+    `percentiles`) instead of only a monotone sum, and each `record` also
+    emits a `repro.obs` "stage" point when a recorder is enabled.
+
+    The historical aggregate fields (`queue_wait_s`, `plan_s`, ...) are
+    deprecated shims: reading one sums the stage's samples; augmented
+    assignment (`clocks.plan_s += dt`) still works by recording the delta
+    as one sample, so pre-existing callers keep functioning while losing
+    no distribution data. `as_dict()` keeps its historical aggregate key
+    set."""
+
+    STAGES = ("queue_wait", "plan", "dispatch", "device", "gather")
+
+    def __init__(self):
+        self._samples: Dict[str, List[float]] = {s: [] for s in self.STAGES}
+
+    def record(self, stage: str, dur: float) -> None:
+        """Record one duration sample for `stage` (and, with a recorder
+        enabled, emit it as an obs "stage" point)."""
+        self._samples[stage].append(float(dur))
+        from repro import obs
+
+        if obs.enabled():
+            obs.point("stage", stage=stage, dur_s=float(dur))
+
+    def samples(self, stage: str) -> List[float]:
+        """The stage's raw duration samples (a copy)."""
+        return list(self._samples[stage])
+
+    def total(self, stage: str) -> float:
+        return float(sum(self._samples[stage]))
+
+    def count(self, stage: str) -> int:
+        return len(self._samples[stage])
+
+    def histogram(self, stage: str):
+        """The stage's samples in a fixed-bucket `repro.obs` Histogram
+        (the same layout every latency metric in the repo uses)."""
+        from repro.obs.metrics import Histogram
+
+        h = Histogram("stage_seconds", (("stage", stage),))
+        h.observe_many(self._samples[stage])
+        return h
+
+    def percentiles(self, stage: str, qs=(50.0, 90.0, 99.0)) -> dict:
+        """{p50: ..., p90: ..., p99: ...} of the stage's samples (NaN when
+        the stage has none)."""
+        return self.histogram(stage).percentiles(qs)
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        """Historical aggregate view: {stage}_s -> summed seconds."""
+        return {f"{s}_s": self.total(s) for s in self.STAGES}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v:.6g}" for k, v in self.as_dict().items())
+        return f"StageClocks({body})"
+
+
+def _aggregate_shim(stage: str):
+    """Deprecated `{stage}_s` aggregate property: read sums the samples;
+    write (only sensible as `+=`) records the delta as one sample."""
+
+    def get(self: StageClocks) -> float:
+        return self.total(stage)
+
+    def set_(self: StageClocks, value: float) -> None:
+        delta = float(value) - self.total(stage)
+        if delta != 0.0:
+            self.record(stage, delta)
+
+    return property(get, set_, doc=f"Deprecated: summed {stage} seconds "
+                    f"(use samples({stage!r}) / histogram({stage!r})).")
+
+
+for _stage in StageClocks.STAGES:
+    setattr(StageClocks, f"{_stage}_s", _aggregate_shim(_stage))
+del _stage
 
 
 @dataclasses.dataclass
@@ -197,6 +266,7 @@ class AdmissionQueue:
                 queue = queue[self.cells_per_batch:]
                 self._queues[bucket] = queue
                 for e in take:
-                    self.clocks.queue_wait_s += max(0.0, now - e.t_enqueue)
+                    self.clocks.record("queue_wait",
+                                       max(0.0, now - e.t_enqueue))
                 closed.append((bucket, take))
         return closed

@@ -13,9 +13,18 @@ can hold responses from several in-flight batches and consume them in any
 order — materializing batch k+2 never waits on batch k.
 
 Stage clocks: the in-flight window (dispatch -> compute observed ready,
-an upper bound measured at the first blocking poll) is charged to
-`StageClocks.device_s`; the host-side gather/slice/cache-write time to
-`gather_s`.
+an upper bound measured at the first blocking poll) is recorded as a
+per-batch "device" sample; the host-side gather/slice/cache-write time as
+a "gather" sample (see `StageClocks`).
+
+Telemetry: with a `repro.obs` recorder enabled, materializing a batch
+emits one "request" point per real lane carrying the cell id, warm/bucket
+facts, the solve's device counters (BCD iterations, SP1/SP2 dual evals,
+residual — one extra host transfer of the packed (C, 4) array, paid only
+when recording), and the end-to-end `latency_s` (submit -> materialize;
+wall-clock — meaningful when the admission clock is the default
+`time.monotonic`). With the default no-op recorder none of this runs and
+the counters stay on device.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from typing import Hashable, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.types import Allocation
 
 from .admission import AllocationRequest, StageClocks
@@ -55,6 +65,7 @@ class PendingResponse:
     def __init__(self, request: AllocationRequest, pipeline):
         self.request = request
         self.cell_id = request.cell_id
+        self.t_enqueue: Optional[float] = None   # set at admission
         self._pipeline = pipeline
         self._batch: Optional[InFlightBatch] = None
         self._lane: int = -1
@@ -88,7 +99,7 @@ def materialize(batch: InFlightBatch, cache: WarmStartCache,
     t0 = time.monotonic()
     jax.block_until_ready(res.allocation.bandwidth)
     t1 = time.monotonic()
-    clocks.device_s += max(0.0, t1 - batch.t_dispatched)
+    clocks.record("device", max(0.0, t1 - batch.t_dispatched))
     # one host transfer per field for the whole batch, then pure-numpy
     # slicing: enqueueing jnp slice ops here would append them to the TAIL
     # of the device stream — behind the next in-flight batch's solve — and
@@ -114,8 +125,26 @@ def materialize(batch: InFlightBatch, cache: WarmStartCache,
             cell_id=r.cell_id, allocation=alloc,
             objective=float(objs[c]), iters=int(iters[c]),
             converged=bool(conv[c]), warm=hit, bucket=plan.bucket))
+    if obs.enabled():
+        # per-request telemetry: the packed (C, 4) counters cost ONE host
+        # transfer, paid only while recording — the no-op path leaves them
+        # on device and emits nothing
+        ctr = None if res.counters is None else np.asarray(res.counters.data)
+        ccols = None if res.counters is None else res.counters.columns
+        t_done = time.monotonic()
+        for pending in batch.pending:
+            r = responses[pending._lane]
+            fields = dict(cell_id=str(r.cell_id), bucket=r.bucket,
+                          warm=r.warm, iters=r.iters,
+                          converged=r.converged, batch_seq=batch.seq)
+            if ctr is not None:
+                fields.update({c: float(v) for c, v in
+                               zip(ccols, ctr[pending._lane])})
+            if pending.t_enqueue is not None:
+                fields["latency_s"] = max(0.0, t_done - pending.t_enqueue)
+            obs.point("request", **fields)
     for pending in batch.pending:
         pending._response = responses[pending._lane]
     batch.materialized = True
-    clocks.gather_s += time.monotonic() - t1
+    clocks.record("gather", time.monotonic() - t1)
     return responses

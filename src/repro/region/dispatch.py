@@ -70,7 +70,7 @@ class Dispatcher:
                             mesh=self.mesh), self.spec)
         fleet = res.fleet if hasattr(res, "fleet") else res
         t1 = time.monotonic()
-        self.clocks.dispatch_s += t1 - t0
+        self.clocks.record("dispatch", t1 - t0)
         batch = InFlightBatch(plan=plan, result=fleet, t_dispatched=t1,
                               seq=self._seq)
         self._seq += 1

@@ -180,14 +180,20 @@ def _pack_stats(fleet: FleetResult) -> Array:
 
 
 def _slice_fleet(fleet: FleetResult, n_cells: int) -> FleetResult:
+    from repro.core.bcd import SolveCounters
+
     if int(fleet.iters.shape[0]) == n_cells:
         return fleet
     cut = lambda x: x[:n_cells]
+    counters = fleet.counters
+    if counters is not None:
+        counters = SolveCounters(data=cut(counters.data),
+                                 columns=counters.columns)
     return FleetResult(
         allocation=jax.tree_util.tree_map(cut, fleet.allocation),
         objective=cut(fleet.objective), iters=cut(fleet.iters),
         converged=cut(fleet.converged), history=cut(fleet.history),
-        columns=fleet.columns)
+        columns=fleet.columns, counters=counters)
 
 
 def allocate_region(sys_batch: SystemParams, w: Weights,

@@ -38,6 +38,7 @@ import time
 from collections import deque
 from typing import Deque, Dict, Hashable, List, Optional
 
+from repro import obs
 from repro.api import SolverSpec
 from repro.core.accuracy import AccuracyModel
 from repro.core.types import Weights
@@ -96,7 +97,9 @@ class RegionPipeline:
                now: Optional[float] = None) -> PendingResponse:
         """Admit one request; returns its future. Nothing is dispatched
         until `pump()`/`poll()` closes a batch (or `result()` forces it)."""
+        now = time.monotonic() if now is None else now
         pending = PendingResponse(request, self)
+        pending.t_enqueue = now   # end-to-end latency origin (obs events)
         self.admission.submit(request, now, token=pending)
         self._unclaimed.append(pending)
         self.stats["requests"] += 1
@@ -127,8 +130,11 @@ class RegionPipeline:
             # >= 2 the previous batch keeps computing underneath it
             while len(self._in_flight) >= self.max_in_flight:
                 self._materialize(self._in_flight[0])
-            plan = self.planner.plan([e.request for e in entries], bucket)
-            batch = self.dispatcher.dispatch(plan)
+            with obs.span("plan", bucket=bucket, n_real=len(entries)):
+                plan = self.planner.plan([e.request for e in entries],
+                                         bucket)
+            with obs.span("dispatch", bucket=bucket):
+                batch = self.dispatcher.dispatch(plan)
             for lane, e in enumerate(entries):
                 e.token._bind(batch, lane)
             for r in plan.requests:
@@ -170,7 +176,8 @@ class RegionPipeline:
 
     # ------------------------------------------------------------ internals
     def _materialize(self, batch: InFlightBatch) -> None:
-        materialize(batch, self.cache, self.clocks)
+        with obs.span("materialize", batch_seq=batch.seq):
+            materialize(batch, self.cache, self.clocks)
         try:
             self._in_flight.remove(batch)
         except ValueError:

@@ -240,7 +240,7 @@ class BatchPlanner:
             weights.extend([self.w] * (C - n_real))
         sys_batch = stack_systems(padded, xp=np)
         init_batch = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *inits)
-        self.clocks.plan_s += time.monotonic() - t0
+        self.clocks.record("plan", time.monotonic() - t0)
         return BatchPlan(requests=list(chunk), bucket=int(bucket),
                          sys_batch=sys_batch, init_batch=init_batch,
                          weights=weights, warm=warm, n_real=n_real)

@@ -11,8 +11,49 @@ HYPOTHESIS_PROFILE=ci (the quick CI job does)."""
 import os
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileCounter:
+    """Counts XLA backend compiles via the jax.monitoring event stream.
+
+    Shared by the jit-cache discipline tests (`test_api_cache`) and the
+    observability guard (`test_obs`): a `count` delta of zero around a
+    warmed trace proves the trace added no compiled shapes."""
+
+    def __init__(self):
+        self.count = 0
+        jax.monitoring.register_event_duration_secs_listener(self._on_event)
+
+    def _on_event(self, name, duration, **kw):
+        if name == _COMPILE_EVENT:
+            self.count += 1
+
+    def unregister(self):
+        # deregister ONLY our listener — clear_event_listeners() would wipe
+        # listeners other modules (or jax internals) registered
+        from jax._src import monitoring as _mon
+
+        for attr in ("_unregister_event_duration_listener_by_callback",):
+            fn = getattr(_mon, attr, None)
+            if fn is not None:
+                fn(self._on_event)
+                return
+        listeners = getattr(_mon, "_event_duration_secs_listeners", None)
+        if listeners is not None and self._on_event in listeners:
+            listeners.remove(self._on_event)
+
+
+@pytest.fixture(scope="module")
+def compile_counter():
+    c = CompileCounter()
+    yield c
+    c.unregister()
+
 
 try:
     from hypothesis import HealthCheck, settings

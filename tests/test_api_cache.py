@@ -4,7 +4,10 @@ trigger a recompile.
 
 Compilations are counted through `jax.monitoring`'s backend-compile
 duration events (every XLA backend compile fires one), measured as deltas
-around a warmed mixed-weights / mixed-bucket request trace.
+around a warmed mixed-weights / mixed-bucket request trace. The listener
+(`CompileCounter`) lives in `tests/conftest.py` as the shared
+`compile_counter` fixture — `test_obs` reuses it to prove the telemetry
+plumbing adds no compiled shapes.
 """
 import warnings
 
@@ -12,47 +15,10 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import (AllocationRequest, Problem, RegionAllocator, SolverSpec,
                    Weights, make_system, solve)
-
-_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
-
-
-class CompileCounter:
-    """Counts XLA backend compiles via the jax.monitoring event stream."""
-
-    def __init__(self):
-        self.count = 0
-        jax.monitoring.register_event_duration_secs_listener(self._on_event)
-
-    def _on_event(self, name, duration, **kw):
-        if name == _COMPILE_EVENT:
-            self.count += 1
-
-    def unregister(self):
-        # deregister ONLY our listener — clear_event_listeners() would wipe
-        # listeners other modules (or jax internals) registered
-        from jax._src import monitoring as _mon
-
-        for attr in ("_unregister_event_duration_listener_by_callback",):
-            fn = getattr(_mon, attr, None)
-            if fn is not None:
-                fn(self._on_event)
-                return
-        listeners = getattr(_mon, "_event_duration_secs_listeners", None)
-        if listeners is not None and self._on_event in listeners:
-            listeners.remove(self._on_event)
-
-
-@pytest.fixture(scope="module")
-def counter():
-    c = CompileCounter()
-    yield c
-    c.unregister()
 
 
 def _mk_cells(sizes, seed=0):
@@ -73,7 +39,7 @@ def _submit_all(svc, cells, weights_of):
     return svc.flush()
 
 
-def test_mixed_weights_trace_compiles_only_per_bucket(counter):
+def test_mixed_weights_trace_compiles_only_per_bucket(compile_counter):
     """The acceptance trace: mixed device counts (2 buckets) x mixed
     per-request weights compile once per (bucket, spec) and ZERO extra
     shapes for any weight change — the PR 4 fragmentation caveat closed."""
@@ -94,7 +60,7 @@ def test_mixed_weights_trace_compiles_only_per_bucket(counter):
         assert svc.compiled_shapes == {(2, 8), (2, 16)}   # == #buckets
 
         # measurement: three more passes, every request with NEW weights
-        before = counter.count
+        before = compile_counter.count
         for k in range(3):
             cells = {cid: _drift(s, 1.0 + 0.01 * (k + 1))
                      for cid, s in cells.items()}
@@ -103,35 +69,35 @@ def test_mixed_weights_trace_compiles_only_per_bucket(counter):
                 lambda i, k=k: Weights(0.1 + 0.1 * i + 0.01 * k,
                                        0.9 - 0.1 * i, 1.0 + i + k))
             assert all(r.warm for r in out.values())
-        assert counter.count == before, (
-            f"{counter.count - before} recompiles triggered by "
+        assert compile_counter.count == before, (
+            f"{compile_counter.count - before} recompiles triggered by "
             f"weight-only changes")
         assert svc.compiled_shapes == {(2, 8), (2, 16)}
 
         # a NEW spec is a new cache key: the same trace recompiles...
         svc2 = RegionAllocator(w0, cells_per_batch=2, min_bucket=8,
                                spec=SolverSpec(max_iters=5, tol=1e-4))
-        before = counter.count
+        before = compile_counter.count
         _submit_all(svc2, cells, lambda i: w0)
-        assert counter.count > before
+        assert compile_counter.count > before
         # ...and an equal spec in a fresh allocator hits the global cache
         svc3 = RegionAllocator(w0, cells_per_batch=2, min_bucket=8,
                                spec=SolverSpec(max_iters=5, tol=1e-4))
         cells = {cid: _drift(s, 1.005) for cid, s in cells.items()}
-        before = counter.count
+        before = compile_counter.count
         _submit_all(svc3, cells, lambda i: w0)
-        assert counter.count == before
+        assert compile_counter.count == before
 
 
-def test_single_cell_weight_changes_do_not_recompile(counter):
+def test_single_cell_weight_changes_do_not_recompile(compile_counter):
     """Same discipline on the single-cell topology through bare solve()."""
     sysp = make_system(jax.random.PRNGKey(3), n_devices=6)
     spec = SolverSpec(max_iters=3, tol=1e-4)
     solve(Problem(system=sysp, weights=Weights(0.5, 0.5, 1.0)), spec)
     solve(Problem(system=sysp, weights=Weights(0.4, 0.6, 2.0)), spec)  # warm
-    before = counter.count
+    before = compile_counter.count
     for i in range(4):
         solve(Problem(system=sysp,
                       weights=Weights(0.1 + 0.2 * i, 0.9 - 0.2 * i,
                                       float(i))), spec)
-    assert counter.count == before
+    assert compile_counter.count == before
