@@ -1,7 +1,7 @@
 """Diff a fresh benchmark --json artifact against a committed baseline.
 
     PYTHONPATH=src python -m benchmarks.compare FRESH.json BASELINE.json \
-        [--factor 2.0] [--latency-factor 1.15] [--strict]
+        [--factor 2.0] [--latency-factor 1.15] [--slo] [--strict]
 
 Rows are matched by name; a fresh row slower than `factor` x the baseline
 `us_per_call` emits a GitHub-Actions `::warning::` annotation (plain text on
@@ -14,6 +14,12 @@ check: histogram-derived `p50_ms`/`p99_ms` values regressing beyond
 `latency_factor` (default 1.15) are flagged the same way. The latency
 histograms use ~7%-wide buckets (`repro.obs.DEFAULT_BOUNDS`), so bucket
 quantization alone can never trip the 15% gate.
+
+`--slo` adds a verdict gate on the SLO-carrying rows (the `slo.*` bench
+rows): a fresh row whose `slo_breaches` count exceeds the baseline's, or
+whose `slo_<name>_ok` flag flipped 1 -> 0 (an objective that used to hold
+now breaches), counts as a regression — warning by default, exit 1 under
+`--strict` like every other regression.
 
 `--strict` flips that: exit 1 when any row regresses beyond the factor (or
 the artifacts are unreadable). It exists for the bench re-record protocol —
@@ -49,8 +55,25 @@ def parse_derived(derived) -> dict:
     return out
 
 
+def slo_regressions(name: str, fd: dict, bd: dict) -> list:
+    """SLO verdict regressions between one row's fresh/baseline derived
+    pairs: more breaches than the baseline, or any `slo_*_ok` flag that
+    flipped 1 -> 0. Returns human-readable descriptions (empty = ok)."""
+    out = []
+    if "slo_breaches" in fd and "slo_breaches" in bd \
+            and fd["slo_breaches"] > bd["slo_breaches"]:
+        out.append(f"slo_breaches {bd['slo_breaches']:.0f} -> "
+                   f"{fd['slo_breaches']:.0f}")
+    for key in sorted(bd):
+        if key.startswith("slo_") and key.endswith("_ok") \
+                and bd[key] >= 1.0 and fd.get(key, 1.0) < 1.0:
+            out.append(f"{key} flipped 1 -> 0 ({name} now breaching)")
+    return out
+
+
 def compare(fresh_path: str, base_path: str, factor: float = 2.0,
-            strict: bool = False, latency_factor: float = 1.15) -> int:
+            strict: bool = False, latency_factor: float = 1.15,
+            slo: bool = False) -> int:
     try:
         fresh, base = load_rows(fresh_path), load_rows(base_path)
     except (OSError, ValueError, KeyError) as e:
@@ -92,6 +115,11 @@ def compare(fresh_path: str, base_path: str, factor: float = 2.0,
                     print(f"::warning::bench row {name} {key} regressed "
                           f"{lratio:.2f}x ({bd[key]:.0f}ms -> "
                           f"{fd[key]:.0f}ms)")
+        if slo:
+            for msg in slo_regressions(name, fd, bd):
+                n_slow += 1
+                status = "SLOW"
+                print(f"::warning::bench row {name} SLO regressed: {msg}")
         print(f"{name}: {ratio:.2f}x vs baseline [{status}]")
     only_base = sorted(set(base) - set(fresh))
     if only_base:
@@ -115,6 +143,9 @@ def main() -> None:
     strict = "--strict" in args
     if strict:
         args.remove("--strict")
+    slo = "--slo" in args
+    if slo:
+        args.remove("--slo")
     for flag, default in (("--factor", factor),
                           ("--latency-factor", latency_factor)):
         if flag not in args:
@@ -139,9 +170,11 @@ def main() -> None:
     if len(args) != 2:
         # still exit 0 unless --strict: must never break the CI pipeline
         print("::warning::usage: python -m benchmarks.compare FRESH.json "
-              "BASELINE.json [--factor F] [--latency-factor L] [--strict]")
+              "BASELINE.json [--factor F] [--latency-factor L] [--slo] "
+              "[--strict]")
         sys.exit(1 if strict else 0)
-    sys.exit(compare(args[0], args[1], factor, strict, latency_factor))
+    sys.exit(compare(args[0], args[1], factor, strict, latency_factor,
+                     slo))
 
 
 if __name__ == "__main__":

@@ -731,6 +731,97 @@ def obs_overhead():
                  f"req_s={out['req_s']:.1f}{extra}")
 
 
+def slo():
+    """SLO plane acceptance rows: a deadlined serving trace replayed
+    through the pipeline with the default SLO set evaluated live over the
+    global registry (the same wiring `examples/serve_observed.py` and the
+    `/slo` endpoint use). The row's derived fields are the gate inputs for
+    `compare.py --slo`: `slo_breaches` (total breach verdicts) and one
+    `slo_<name>_ok` flag per objective (1 = verdict was not a breach), so
+    a baseline-vs-fresh comparison fails --strict when an objective that
+    used to hold starts breaching."""
+    from repro.region import AllocationRequest, MaxWait, RegionPipeline
+
+    n_req, cells_per_batch, min_bucket = 48, 8, 16
+    spec = SolverSpec(max_iters=8, tol=1e-4)
+    w = Weights(0.5, 0.5, 1.0)
+    sizes = [12, 24]
+    key = jax.random.PRNGKey(81)
+    systems = [make_system(jax.random.fold_in(key, i),
+                           n_devices=sizes[i % len(sizes)])
+               for i in range(n_req)]
+
+    def pipe():
+        return RegionPipeline(w, cells_per_batch=cells_per_batch,
+                              min_bucket=min_bucket, spec=spec,
+                              policy=MaxWait(0.02), max_in_flight=2)
+
+    def replay(deadline_budget=None, plane=None):
+        p = pipe()
+        t_start = time.monotonic()
+        futs = []
+        for i in range(n_req):
+            dl = None if deadline_budget is None \
+                else time.monotonic() + deadline_budget
+            futs.append(p.submit(AllocationRequest(
+                cell_id=i, sys=systems[i], deadline=dl)))
+            if i % cells_per_batch == 0:
+                p.poll()
+                if plane is not None:
+                    plane.observe()
+        p.drain()
+        return time.monotonic() - t_start, p.stats
+
+    replay()   # compile the bucket menu + warm caches, no deadlines
+
+    plane = obs.SloPlane(obs.default_slos(
+        latency_threshold_s=2.0, latency_objective=0.9,
+        deadline_objective=0.9, convergence_objective=0.5))
+    plane.observe()
+    t0 = time.time()
+    wall, stats = replay(deadline_budget=10.0, plane=plane)
+    verdicts = plane.check()
+    breaches = sum(v["verdict"] == "breach" for v in verdicts)
+    flags = ";".join(
+        f"slo_{v['name']}_ok={0 if v['verdict'] == 'breach' else 1}"
+        for v in verdicts)
+    hit = stats["deadline_hits"]
+    total = stats["deadline_requests"]
+    _row(f"slo.serve.R{n_req}", t0, t0 + wall,
+         f"slo_breaches={breaches};{flags};"
+         f"deadline_hit_rate={hit / max(total, 1):.3f};"
+         f"cells_converged={stats['cells_converged']}/"
+         f"{stats['cells_solved']}")
+
+
+def xla_cost():
+    """XLA compiled-cost trajectory rows: AOT-lower the solver's
+    single-cell and fleet programs and record the backend cost model's
+    FLOPs / bytes-accessed per compiled shape (`repro.obs.profile`).
+    Nothing executes — the rows track compute-per-shape across PRs, so an
+    algorithmic change that bloats the compiled program shows up in the
+    BENCH artifact even when wall time hides it."""
+    from repro.obs import profile
+
+    spec = SolverSpec(max_iters=8, tol=1e-4)
+    w = Weights(0.5, 0.5, 1.0)
+    key = jax.random.PRNGKey(91)
+
+    shapes = [("bcd", make_system(key, n_devices=N_DEV), f"N{N_DEV}"),
+              ("fleet", make_fleet(jax.random.fold_in(key, 1), n_cells=8,
+                                   n_devices=N_DEV), f"C8.N{N_DEV}")]
+    for kind, sysp, tag in shapes:
+        t0 = time.time()
+        cost = profile.solve_cost(Problem(system=sysp, weights=w),
+                                  spec=spec)
+        t1 = time.time()
+        if cost is None:
+            _row(f"xla_cost.{kind}.{tag}", t0, t1, "flops=nan;bytes=nan")
+            continue
+        _row(f"xla_cost.{kind}.{tag}", t0, t1,
+             f"flops={cost['flops']:.4g};bytes={cost['bytes_accessed']:.4g}")
+
+
 def assoc_mobility():
     """Cross-cell association + mobility churn acceptance rows.
 
@@ -891,6 +982,8 @@ BENCHES = {
     "rounds": rounds_dynamics,
     "serve_latency": serve_latency,
     "obs_overhead": obs_overhead,
+    "slo": slo,
+    "xla_cost": xla_cost,
     "assoc_mobility": assoc_mobility,
     "sp1_sweep": sp1_sweep_scale,
     "ablations": ablations,

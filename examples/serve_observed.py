@@ -1,15 +1,23 @@
 """Observed region serving: the full `repro.obs` telemetry loop.
 
-Runs a synthetic Poisson request trace through `RegionAllocator` with a
-JSONL span/point recorder enabled, then:
+Runs a synthetic Poisson request trace (every request deadlined) through
+`RegionAllocator` with a JSONL span/point recorder enabled, then:
 
   * feeds the per-stage samples (`StageClocks`) and end-to-end request
     latencies into the always-on metrics registry (fixed-bucket
     histograms — the same layout `benchmarks/compare.py` gates on);
+  * serves the registry live over HTTP (`MetricsServer`: /metrics,
+    /healthz, /slo) and scrapes itself — the scraped Prometheus text is
+    round-tripped through `obs.parse_prometheus_text` before it is
+    written, so the artifact is parser-validated;
+  * evaluates the default SLO set (p99 serve latency, deadline-hit rate,
+    BCD convergence) with multi-window burn rates and prints/writes the
+    verdicts (slo.json);
+  * wraps one served batch in an XLA profiler trace session
+    (`obs.profile.trace` -> profile/ artifact dir);
   * writes the event stream to `events.jsonl` and the metrics snapshot to
-    `metrics.jsonl` + Prometheus text;
-  * prints the same per-stage / per-request report you'd get from
-    `python -m repro.obs.report events.jsonl`.
+    `metrics.jsonl` + Prometheus text, then prints the
+    `python -m repro.obs.report` tables.
 
 Every request event carries the solve's device-resident counters (BCD
 iterations, SP1/SP2 dual evals, convergence residual) — the warm-start
@@ -19,10 +27,14 @@ requests.
     PYTHONPATH=src python examples/serve_observed.py
 
 REPRO_SMOKE=1 shrinks the trace for CI. Artifacts land in the working
-directory (override with REPRO_OBS_DIR).
+directory (override with REPRO_OBS_DIR). REPRO_OBS_PORT pins the scrape
+port (default: ephemeral); REPRO_OBS_HOLD_S keeps the server up that many
+seconds after the trace so an external scraper (CI's curl) can hit it.
 """
+import json
 import os
 import time
+import urllib.request
 
 import jax
 import numpy as np
@@ -33,15 +45,21 @@ from repro.region import AllocationRequest, RegionAllocator
 
 SMOKE = os.environ.get("REPRO_SMOKE") == "1"
 OUT_DIR = os.environ.get("REPRO_OBS_DIR", ".")
+PORT = int(os.environ.get("REPRO_OBS_PORT", "0"))
+HOLD_S = float(os.environ.get("REPRO_OBS_HOLD_S", "0"))
 os.makedirs(OUT_DIR, exist_ok=True)
 N_CELLS = 8 if SMOKE else 32
 TARGET_REQUESTS = 16 if SMOKE else 128
 RATE = 6.0
 DRIFT = 0.01
+DEADLINE_BUDGET_S = 30.0 if SMOKE else 10.0   # absolute, admission clock
 
 events_path = os.path.join(OUT_DIR, "events.jsonl")
 metrics_path = os.path.join(OUT_DIR, "metrics.jsonl")
 prom_path = os.path.join(OUT_DIR, "metrics.prom")
+scrape_path = os.path.join(OUT_DIR, "scrape.prom")
+slo_path = os.path.join(OUT_DIR, "slo.json")
+profile_dir = os.path.join(OUT_DIR, "profile")
 
 rng = np.random.default_rng(11)
 key = jax.random.PRNGKey(0)
@@ -53,7 +71,18 @@ cells = {cid: make_system(jax.random.fold_in(key, cid),
 svc = RegionAllocator(Weights(0.5, 0.5, 1.0), cells_per_batch=8,
                       min_bucket=16, spec=SolverSpec(tol=1e-4))
 
+# SLO plane over the global registry the completion layer feeds; the
+# MetricsServer exposes both raw series and verdicts while the trace runs
+slo_plane = obs.SloPlane(obs.default_slos(
+    latency_threshold_s=2.0 if SMOKE else 0.5,
+    latency_objective=0.5, deadline_objective=0.9,
+    convergence_objective=0.5))
+server = obs.MetricsServer(slo_plane=slo_plane, port=PORT).start()
+print(f"scrape endpoint up: {server.url('/metrics')} (+ /healthz /slo)")
+slo_plane.observe()
+
 served = 0
+profiled = False
 t0 = time.time()
 # one recorder for the whole trace: every solve/plan/dispatch/materialize
 # span, every stage sample, and one "request" point per served cell land
@@ -65,14 +94,24 @@ with obs.recording(obs.JsonlRecorder(events_path)):
                         N_CELLS))
             if k == 0:
                 continue
+            deadline = time.monotonic() + DEADLINE_BUDGET_S
             for cid in rng.choice(N_CELLS, size=k, replace=False):
                 cid = int(cid)
                 drift = 1.0 + DRIFT * float(rng.standard_normal())
                 cells[cid] = cells[cid].replace(
                     gain=np.asarray(cells[cid].gain) * drift)
-                svc.submit(AllocationRequest(cell_id=cid, sys=cells[cid]))
+                svc.submit(AllocationRequest(cell_id=cid, sys=cells[cid],
+                                             deadline=deadline))
             served += k
-            svc.flush()
+            if not profiled and served >= TARGET_REQUESTS // 2:
+                # one profiled flush mid-trace: caches are warm, so the
+                # session captures steady-state device work, not compiles
+                profiled = True
+                with obs.profile.trace(profile_dir, label="serve_flush"):
+                    svc.flush()
+            else:
+                svc.flush()
+            slo_plane.observe()
 wall = time.time() - t0
 
 # --- metric plane: fold the trace into the always-on registry -------------
@@ -87,6 +126,17 @@ lat.observe_many(e["latency_s"] for e in events
 obs.counter("requests_served").inc(served)
 obs.gauge("serve_wall_seconds").set(wall)
 
+# --- SLO verdicts + self-scrape (parser-validated wire artifacts) ---------
+verdicts = slo_plane.check()
+with open(slo_path, "w") as fh:
+    json.dump(dict(slos=verdicts), fh, indent=1)
+
+with urllib.request.urlopen(server.url("/metrics"), timeout=10) as resp:
+    scraped = resp.read().decode()
+samples = obs.parse_prometheus_text(scraped)   # raises if malformed
+with open(scrape_path, "w") as fh:
+    fh.write(scraped)
+
 n_metrics = obs.write_metrics_jsonl(metrics_path)
 with open(prom_path, "w") as fh:
     fh.write(obs.prometheus_text())
@@ -95,6 +145,16 @@ print(f"served {served} requests in {wall:.2f}s "
       f"({served / wall:.1f} req/s), "
       f"{len(events)} events -> {events_path}, "
       f"{n_metrics} metrics -> {metrics_path} (+ {prom_path})")
+print(f"scraped {len(samples)} samples -> {scrape_path} "
+      f"(parse_prometheus_text-validated); profiler trace -> "
+      f"{profile_dir}/")
+for v in verdicts:
+    burns = " ".join(f"{w['name']}={w['burn_rate']:.2f}"
+                     for w in v["windows"])
+    ratio = ("n/a" if v["good_ratio"] is None
+             else f"{100 * v['good_ratio']:.1f}%")
+    print(f"SLO {v['name']}: {v['verdict']} (good {ratio}, "
+          f"objective {100 * v['objective']:g}%, burn {burns})")
 
 # warm-start effect straight from the per-request counters
 req = [e for e in events if e.get("name") == "request"]
@@ -107,3 +167,9 @@ if cold and warm:
 
 print()
 print(format_report(summarize(events)))
+
+if HOLD_S > 0:
+    print(f"holding scrape endpoint for {HOLD_S:g}s "
+          f"({server.url('/metrics')})", flush=True)
+    time.sleep(HOLD_S)
+server.stop()

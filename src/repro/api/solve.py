@@ -325,7 +325,8 @@ def _solve_fixed_region(p: Problem, spec: SolverSpec, sysp, init):
                              mesh, spec.lockstep)
     fleet = _slice_fleet(
         _fleet_result(out, spec.max_iters, dtype, cols=_FIXED_COLS), C)
-    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
+    return RegionResult(fleet=fleet,
+                        _stats_packed=_pack_stats(fleet, n_shards=D),
                         _n_cells=C, _mesh_devices=D)
 
 
@@ -362,7 +363,8 @@ def _solve_region(p: Problem, spec: SolverSpec, sysp, init):
                              spec.sp2_method, spec.sp2_iters, mesh,
                              spec.lockstep, init is not None)
     fleet = _slice_fleet(_fleet_result(out, spec.max_iters, dtype), C)
-    return RegionResult(fleet=fleet, _stats_packed=_pack_stats(fleet),
+    return RegionResult(fleet=fleet,
+                        _stats_packed=_pack_stats(fleet, n_shards=D),
                         _n_cells=C, _mesh_devices=D)
 
 

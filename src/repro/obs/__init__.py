@@ -10,6 +10,11 @@ The subsystem has two independent planes, deliberately not exported from
   * **metric plane** (`metrics` + `export`): always-on counters, gauges,
     and fixed-bucket latency histograms in a global registry, exported
     as Prometheus text or metrics JSONL.
+  * **SLO & profiling plane** (`slo` + `http` + `profile`): declarative
+    objectives with multi-window burn-rate verdicts evaluated over the
+    metric plane, a stdlib background HTTP exporter (`GET /metrics`,
+    `/healthz`, `/slo` — the repo's wire surface), and opt-in XLA
+    profiler trace sessions + compiled-cost gauges.
 
 Device-resident solver counters (BCD iterations, SP1/SP2 dual evals,
 convergence residuals) live in `core/bcd.py` as a `counters` leaf of the
@@ -37,7 +42,12 @@ from .metrics import (
     Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
     counter, gauge, histogram, DEFAULT_BOUNDS,
 )
-from .export import prometheus_text, metrics_jsonl, write_metrics_jsonl
+from .export import (prometheus_text, metrics_jsonl, write_metrics_jsonl,
+                     parse_prometheus_text)
+from .slo import (SLO, SloPlane, BurnWindow, DEFAULT_WINDOWS,
+                  LatencyObjective, RatioObjective, default_slos)
+from .http import MetricsServer
+from . import profile
 
 __all__ = [
     # recorder / spans
@@ -49,4 +59,9 @@ __all__ = [
     "counter", "gauge", "histogram", "DEFAULT_BOUNDS",
     # exporters
     "prometheus_text", "metrics_jsonl", "write_metrics_jsonl",
+    "parse_prometheus_text",
+    # SLO plane + wire surface + profiling
+    "SLO", "SloPlane", "BurnWindow", "DEFAULT_WINDOWS",
+    "LatencyObjective", "RatioObjective", "default_slos",
+    "MetricsServer", "profile",
 ]

@@ -17,11 +17,13 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Any, Dict, List, Optional
+import re
+from typing import Any, Dict, List, Optional, Tuple
 
 from .metrics import MetricsRegistry, REGISTRY
 
-__all__ = ["prometheus_text", "metrics_jsonl", "write_metrics_jsonl"]
+__all__ = ["prometheus_text", "metrics_jsonl", "write_metrics_jsonl",
+           "parse_prometheus_text"]
 
 
 def _name(raw: str) -> str:
@@ -78,8 +80,44 @@ def prometheus_text(registry: Optional[MetricsRegistry] = None) -> str:
         lines.append(f"{n}_bucket{_labels(h.labels, le_inf)} {h.count}")
         lines.append(f"{n}_sum{_labels(h.labels)} {_num(h.sum)}")
         lines.append(f"{n}_count{_labels(h.labels)} {h.count}")
+        if h.dropped:
+            # non-finite observations excluded from the series above
+            nd = n + "_dropped_total"
+            header(nd, "counter")
+            lines.append(f"{nd}{_labels(h.labels)} {h.dropped}")
 
     return "\n".join(lines) + ("\n" if lines else "")
+
+
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$')
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="([^"]*)"')
+
+
+def parse_prometheus_text(text: str
+                          ) -> Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                                    float]:
+    """Parse Prometheus text exposition back into
+    `{(name, sorted (k, v) label pairs): value}` — the round-trip check
+    for `prometheus_text` (scrape smoke tests, the compare.py SLO gate).
+
+    Covers the subset this repo emits: one sample per line, `# TYPE`/`#`
+    comment lines skipped, label values quoted without escapes. Malformed
+    sample lines raise ValueError — a scrape endpoint that stops parsing
+    should fail loudly."""
+    out: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], float] = {}
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"parse_prometheus_text: bad sample {line!r}")
+        labels = tuple(sorted(
+            (k, v) for k, v in _LABEL_RE.findall(m.group("labels") or "")))
+        out[(m.group("name"), labels)] = float(m.group("value"))
+    return out
 
 
 def metrics_jsonl(registry: Optional[MetricsRegistry] = None
@@ -101,6 +139,8 @@ def metrics_jsonl(registry: Optional[MetricsRegistry] = None
     for h in reg.histograms():
         rec = dict(kind="histogram", name=h.name, labels=dict(h.labels),
                    count=h.count, sum=h.sum)
+        if h.dropped:
+            rec["dropped"] = h.dropped
         if h.count:
             rec.update(min=h.min, max=h.max, mean=h.mean,
                        **h.percentiles((50.0, 90.0, 99.0)))

@@ -89,6 +89,12 @@ class Histogram:
     interpolates within the winning bucket, which is accurate to the
     bucket growth factor (~7% with `DEFAULT_BOUNDS`) — tight enough for
     the 15% regression gate, and stable because the layout never moves.
+
+    Non-finite observations (NaN/inf — e.g. a latency computed from a
+    clock that never ticked) are counted in `dropped` and excluded from
+    every aggregate: a single NaN would otherwise defeat both min/max
+    comparisons, land in an arbitrary bucket, and poison `sum`, `mean`,
+    and every derived percentile for the rest of the run.
     """
 
     def __init__(self, name: str, labels: LabelPairs = (),
@@ -101,9 +107,13 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
+        self.dropped = 0
 
     def observe(self, value: float) -> None:
         v = float(value)
+        if not math.isfinite(v):
+            self.dropped += 1
+            return
         self.count += 1
         self.sum += v
         if v < self.min:

@@ -35,6 +35,7 @@ tests):
 from __future__ import annotations
 
 import json
+import queue as _queue
 import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional
@@ -91,19 +92,67 @@ class MemoryRecorder(Recorder):
 
 class JsonlRecorder(Recorder):
     """Streams one JSON object per line to `path` (append mode so several
-    runs can share a trace file; pass `fresh=True` to truncate)."""
+    runs can share a trace file; pass `fresh=True` to truncate).
+
+    Writes happen on a dedicated daemon writer thread fed by a bounded
+    queue: `emit` on the serving thread is one non-blocking `put` (JSON
+    serialization AND the file write are both off the hot path). A full
+    queue — the writer can't keep up — drops the event and counts it in
+    `dropped_events` (mirrored to the `obs_events_dropped` counter in the
+    global metrics registry) instead of stalling the pipeline. `close()`
+    flushes: it joins the writer after a sentinel, so every queued event
+    is on disk when `obs.recording(...)` exits. Events keep their emit
+    order — a single writer drains the queue FIFO."""
 
     enabled = True
 
-    def __init__(self, path: str, fresh: bool = True):
+    _SENTINEL = object()
+
+    def __init__(self, path: str, fresh: bool = True,
+                 queue_size: int = 8192):
         self.path = path
+        self.dropped_events = 0
         self._fh = open(path, "w" if fresh else "a")
+        self._queue: _queue.Queue = _queue.Queue(maxsize=int(queue_size))
+        self._closed = False
+        # test hook: clearing this gate stalls the writer so queue-full
+        # drops become deterministic; set by default (a no-op wait)
+        self._drain_gate = threading.Event()
+        self._drain_gate.set()
+        self._writer = threading.Thread(target=self._drain, daemon=True,
+                                        name="obs-jsonl-writer")
+        self._writer.start()
 
     def emit(self, event):
-        self._fh.write(json.dumps(event, default=_json_default))
-        self._fh.write("\n")
+        if self._closed:
+            self._count_drop()
+            return
+        try:
+            self._queue.put_nowait(event)
+        except _queue.Full:
+            self._count_drop()
+
+    def _count_drop(self) -> None:
+        self.dropped_events += 1
+        from .metrics import counter
+
+        counter("obs_events_dropped").inc()
+
+    def _drain(self) -> None:
+        while True:
+            event = self._queue.get()
+            self._drain_gate.wait()
+            if event is self._SENTINEL:
+                return
+            self._fh.write(json.dumps(event, default=_json_default))
+            self._fh.write("\n")
 
     def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(self._SENTINEL)   # blocking: the flush marker
+        self._writer.join()
         if not self._fh.closed:
             self._fh.flush()
             self._fh.close()

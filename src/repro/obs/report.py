@@ -10,7 +10,10 @@ and prints:
   * per-stage tables from "stage" points (the region pipeline's
     queue_wait/plan/dispatch/device/gather samples);
   * per-request solver-effort counters from "request" points: BCD
-    iterations, SP1/SP2 dual evals, final residual, end-to-end latency.
+    iterations, SP1/SP2 dual evals, final residual, end-to-end latency;
+  * a deadline-hit line when any request carried a deadline (the
+    completion layer stamps `deadline_hit` on those "request" points —
+    the same facts the SLO plane's deadline-hit-rate objective counts).
 
 Usage:
     python -m repro.obs.report events.jsonl
@@ -44,6 +47,7 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
     Returns {"spans": {name: Histogram_of_dur_s},
              "stages": {stage: Histogram_of_dur_s},
              "requests": {"latency": Histogram, "counters": {k: [v...]}},
+             "deadlines": {"hits": int, "total": int},
              "counts": {event name: occurrences}}.
     """
     span_durs: Dict[str, List[float]] = defaultdict(list)
@@ -51,6 +55,7 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
     req_lat: List[float] = []
     req_counters: Dict[str, List[float]] = defaultdict(list)
     counts: Dict[str, int] = defaultdict(int)
+    dl_hits = dl_total = 0
 
     for ev in events:
         counts[ev.get("name", "?")] += 1
@@ -62,6 +67,9 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
         elif t == "point" and ev.get("name") == "request":
             if "latency_s" in ev:
                 req_lat.append(float(ev["latency_s"]))
+            if "deadline_hit" in ev:
+                dl_total += 1
+                dl_hits += bool(ev["deadline_hit"])
             for k, v in ev.items():
                 if k in ("type", "name", "span", "parent") or k == "ts":
                     continue
@@ -73,6 +81,7 @@ def summarize(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
         "stages": {k: _hist_of(v) for k, v in sorted(stage_durs.items())},
         "requests": {"latency": _hist_of(req_lat),
                      "counters": dict(sorted(req_counters.items()))},
+        "deadlines": {"hits": dl_hits, "total": dl_total},
         "counts": dict(counts),
     }
 
@@ -127,6 +136,11 @@ def format_report(summary: Dict[str, Any],
     if ctr_rows:
         blocks.append(_table("== per-request solver counters ==",
                              ctr_rows, ["counter", "n", "mean", "p50", "max"]))
+
+    dl = summary.get("deadlines", {"total": 0})
+    if dl["total"]:
+        blocks.append(f"== deadlines == {dl['hits']}/{dl['total']} hit "
+                      f"({100.0 * dl['hits'] / dl['total']:.1f}%)")
 
     if not blocks:
         blocks.append("(no span/stage/request events found)")

@@ -31,6 +31,7 @@ import dataclasses
 import time
 from typing import Dict, Hashable, List, Optional, Tuple
 
+from repro import obs
 from repro.core.types import SystemParams, Weights
 
 from .batch import DEFAULT_MIN_BUCKET, bucket_size
@@ -265,8 +266,18 @@ class AdmissionQueue:
                 take = queue[:self.cells_per_batch]
                 queue = queue[self.cells_per_batch:]
                 self._queues[bucket] = queue
+                late = 0
                 for e in take:
                     self.clocks.record("queue_wait",
                                        max(0.0, now - e.t_enqueue))
+                    if (e.request.deadline is not None
+                            and e.request.deadline < now):
+                        late += 1
+                if late:
+                    # the deadline expired while the request was still
+                    # QUEUED — in the admission clock's own units, so the
+                    # count is meaningful even under logical-tick clocks
+                    # (unlike the completion layer's wall-clock hit check)
+                    obs.counter("region_admission_deadline_late").inc(late)
                 closed.append((bucket, take))
         return closed

@@ -20,11 +20,19 @@ a "gather" sample (see `StageClocks`).
 Telemetry: with a `repro.obs` recorder enabled, materializing a batch
 emits one "request" point per real lane carrying the cell id, warm/bucket
 facts, the solve's device counters (BCD iterations, SP1/SP2 dual evals,
-residual — one extra host transfer of the packed (C, 4) array, paid only
-when recording), and the end-to-end `latency_s` (submit -> materialize;
-wall-clock — meaningful when the admission clock is the default
-`time.monotonic`). With the default no-op recorder none of this runs and
-the counters stay on device.
+residual), the end-to-end `latency_s` (submit -> materialize; wall-clock
+— meaningful when the admission clock is the default `time.monotonic`),
+and — for deadlined requests — `deadline_hit` (same clock caveat).
+
+The always-on metric plane is fed here too (the SLO plane's inputs): per
+batch, `region_solve_cells` / `region_solve_converged_cells` counters,
+the `region_request_latency_seconds` histogram, deadline hit/miss/request
+counters, and the summed solver-effort counters
+(`region_solver_{bcd_iters,sp1_evals,sp2_evals}`). The packed (C, 4)
+counter matrix costs ONE extra host transfer per batch — a few hundred
+bytes read after the batch is already blocked on — and the same sums land
+in `RegionPipeline.stats["solver_counters"]` when the pipeline passes its
+stats dict in.
 """
 from __future__ import annotations
 
@@ -91,8 +99,12 @@ class PendingResponse:
 
 
 def materialize(batch: InFlightBatch, cache: WarmStartCache,
-                clocks: StageClocks) -> List[CellResponse]:
-    """Gather one batch host-side and resolve its futures (idempotent)."""
+                clocks: StageClocks,
+                stats: Optional[dict] = None) -> List[CellResponse]:
+    """Gather one batch host-side and resolve its futures (idempotent).
+    `stats`, when given (the pipeline's dict), accumulates solver-effort
+    counter sums and deadline/convergence tallies alongside the metric
+    registry."""
     if batch.materialized:
         return [p._response for p in batch.pending]
     plan, res = batch.plan, batch.result
@@ -125,13 +137,15 @@ def materialize(batch: InFlightBatch, cache: WarmStartCache,
             cell_id=r.cell_id, allocation=alloc,
             objective=float(objs[c]), iters=int(iters[c]),
             converged=bool(conv[c]), warm=hit, bucket=plan.bucket))
+    # the packed (C, 4) counter matrix: one small host transfer per batch
+    # (the batch is already blocked on above), feeding the always-on SLO
+    # metrics, the pipeline stats, and — while recording — request points
+    ctr = None if res.counters is None else np.asarray(res.counters.data)
+    ccols = None if res.counters is None else res.counters.columns
+    t_done = time.monotonic()
+    n_real = len(plan.requests)
+    _record_metrics(batch, ctr, ccols, conv, n_real, t_done, stats)
     if obs.enabled():
-        # per-request telemetry: the packed (C, 4) counters cost ONE host
-        # transfer, paid only while recording — the no-op path leaves them
-        # on device and emits nothing
-        ctr = None if res.counters is None else np.asarray(res.counters.data)
-        ccols = None if res.counters is None else res.counters.columns
-        t_done = time.monotonic()
         for pending in batch.pending:
             r = responses[pending._lane]
             fields = dict(cell_id=str(r.cell_id), bucket=r.bucket,
@@ -142,9 +156,56 @@ def materialize(batch: InFlightBatch, cache: WarmStartCache,
                                zip(ccols, ctr[pending._lane])})
             if pending.t_enqueue is not None:
                 fields["latency_s"] = max(0.0, t_done - pending.t_enqueue)
+            if pending.request.deadline is not None:
+                fields["deadline_hit"] = bool(
+                    t_done <= pending.request.deadline)
             obs.point("request", **fields)
     for pending in batch.pending:
         pending._response = responses[pending._lane]
     batch.materialized = True
     clocks.record("gather", time.monotonic() - t1)
     return responses
+
+
+def _record_metrics(batch: InFlightBatch, ctr, ccols,
+                    conv: np.ndarray, n_real: int, t_done: float,
+                    stats: Optional[dict]) -> None:
+    """Always-on metric-plane accounting for one materialized batch: the
+    counters/histograms the SLO plane (`obs.slo.default_slos`) evaluates.
+    Deadline hits compare `time.monotonic()` against the request deadline
+    — meaningful when the admission clock is the default one (the same
+    caveat the `latency_s` event field carries)."""
+    conv_real = int(np.sum(conv[:n_real]))
+    obs.counter("region_solve_cells").inc(n_real)
+    obs.counter("region_solve_converged_cells").inc(conv_real)
+    lat_h = obs.histogram("region_request_latency_seconds")
+    dl_hits = dl_total = 0
+    for pending in batch.pending:
+        if pending.t_enqueue is not None:
+            lat_h.observe(max(0.0, t_done - pending.t_enqueue))
+        if pending.request.deadline is not None:
+            dl_total += 1
+            dl_hits += bool(t_done <= pending.request.deadline)
+    if dl_total:
+        obs.counter("region_deadline_requests").inc(dl_total)
+        obs.counter("region_deadline_hits").inc(dl_hits)
+        obs.counter("region_deadline_misses").inc(dl_total - dl_hits)
+    sums = {}
+    if ctr is not None:
+        real = ctr[:n_real]
+        for i, col in enumerate(ccols):
+            if col == "residual":
+                continue
+            s = float(np.nansum(real[:, i]))
+            sums[col] = s
+            obs.counter(f"region_solver_{col}").inc(s)
+    if stats is not None:
+        stats["cells_solved"] = stats.get("cells_solved", 0) + n_real
+        stats["cells_converged"] = (stats.get("cells_converged", 0)
+                                    + conv_real)
+        stats["deadline_requests"] = (stats.get("deadline_requests", 0)
+                                      + dl_total)
+        stats["deadline_hits"] = stats.get("deadline_hits", 0) + dl_hits
+        agg = stats.setdefault("solver_counters", {})
+        for col, s in sums.items():
+            agg[col] = agg.get(col, 0.0) + s

@@ -88,11 +88,16 @@ class RegionResult:
     """A sharded fleet solve plus per-shard convergence stats.
 
     `stats` is gathered host-side lazily, ONCE, on first access (one
-    device->host transfer of a packed (4,) array): the serving hot path —
-    which only slices allocations back out — never pays the blocking
-    sync, while monitoring callers still get the summary for free."""
+    device->host transfer of a packed (4 + 4*D,) array): the serving hot
+    path — which only slices allocations back out — never pays the
+    blocking sync, while monitoring callers still get the summary for
+    free. The trailing 4*D block is the per-shard `SolveCounters`
+    aggregation (summed bcd_iters/sp1_evals/sp2_evals and max residual
+    over each shard's contiguous cell block, pad cells excluded) — the
+    per-shard attribution the SLO plane and multi-host monitoring need
+    without a second sync."""
     fleet: FleetResult
-    _stats_packed: Array     # (4,) device array, see _pack_stats
+    _stats_packed: Array     # (4,) or (4 + 4*D,) device array, _pack_stats
     _n_cells: int
     _mesh_devices: int
     _stats_cache: Optional[dict] = dataclasses.field(default=None,
@@ -102,10 +107,22 @@ class RegionResult:
     def stats(self) -> dict:
         if self._stats_cache is None:
             vals = np.asarray(self._stats_packed)
-            self._stats_cache = dict(
+            stats = dict(
                 cells=self._n_cells, mesh_devices=self._mesh_devices,
                 converged_frac=float(vals[0]), iters_max=int(vals[1]),
                 iters_mean=float(vals[2]), objective_mean=float(vals[3]))
+            if vals.shape[0] > 4:   # per-shard counter block (D, 4)
+                shard = vals[4:].reshape(-1, 4)
+                stats.update(
+                    shard_bcd_iters=[float(x) for x in shard[:, 0]],
+                    shard_sp1_evals=[float(x) for x in shard[:, 1]],
+                    shard_sp2_evals=[float(x) for x in shard[:, 2]],
+                    shard_residual_max=[float(x) for x in shard[:, 3]],
+                    bcd_iters_total=float(shard[:, 0].sum()),
+                    sp1_evals_total=float(shard[:, 1].sum()),
+                    sp2_evals_total=float(shard[:, 2].sum()),
+                    residual_max=float(shard[:, 3].max()))
+            self._stats_cache = stats
         return self._stats_cache
 
     # convenience passthroughs so RegionResult reads like a FleetResult
@@ -167,16 +184,40 @@ def _region_fixed_impl(sys_batch, warr, T_round, alloc0, tol,
                      out_specs=P("cells"), check_rep=False)(*args)
 
 
-def _pack_stats(fleet: FleetResult) -> Array:
-    """Per-shard convergence stats packed into one (4,) device array; the
-    host transfer happens lazily in RegionResult.stats."""
+def _pack_stats(fleet: FleetResult, n_shards: int = 1) -> Array:
+    """Region summary stats packed into ONE device array — (4,) base
+    stats plus, when the fleet carries `SolveCounters`, a (n_shards, 4)
+    per-shard aggregation flattened behind them. The single lazy host
+    transfer happens in `RegionResult.stats`.
+
+    Shard attribution mirrors the mesh layout: cells are sharded in
+    contiguous blocks of ceil(C / n_shards) (the `place_cells`
+    NamedSharding), so shard d's block is rows [d*B, (d+1)*B) of the
+    zero-padded counter matrix — pad cells contribute nothing (their
+    replicated work on the last shard is an artifact of padding, not
+    attributable solver effort). Effort columns (bcd_iters, sp1_evals,
+    sp2_evals) are nansum'd per shard; the residual column is nanmax'd
+    (a NaN residual marks a 0-iteration lane). All eager device ops on
+    the already-computed result — no new compiled solve shapes."""
     dtype = jnp.asarray(fleet.objective).dtype
-    return jnp.stack([
+    base = jnp.stack([
         jnp.mean(fleet.converged.astype(dtype)),
         jnp.max(fleet.iters).astype(dtype),
         jnp.mean(fleet.iters.astype(dtype)),
         jnp.nanmean(fleet.objective),
     ])
+    if fleet.counters is None:
+        return base
+    ctr = jnp.asarray(fleet.counters.data, dtype)       # (C, 4)
+    C = ctr.shape[0]
+    D = max(int(n_shards), 1)
+    block = -(-C // D)
+    pad = jnp.zeros((block * D - C, ctr.shape[1]), dtype)
+    per_shard = jnp.concatenate([ctr, pad]).reshape(D, block, -1)
+    effort = jnp.nansum(per_shard[..., :3], axis=1)     # (D, 3)
+    resid = jnp.nanmax(per_shard[..., 3], axis=1)       # (D,)
+    return jnp.concatenate(
+        [base, jnp.concatenate([effort, resid[:, None]], axis=1).ravel()])
 
 
 def _slice_fleet(fleet: FleetResult, n_cells: int) -> FleetResult:

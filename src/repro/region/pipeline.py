@@ -90,7 +90,10 @@ class RegionPipeline:
         self._unclaimed: List[PendingResponse] = []
         self.stats = dict(requests=0, batches=0, cache_hits=0,
                           cache_misses=0, cells_padded=0,
-                          handover_purges=0, shapes=set())
+                          handover_purges=0, shapes=set(),
+                          cells_solved=0, cells_converged=0,
+                          deadline_hits=0, deadline_requests=0,
+                          solver_counters={})
 
     # ------------------------------------------------------------ streaming
     def submit(self, request: AllocationRequest,
@@ -177,7 +180,7 @@ class RegionPipeline:
     # ------------------------------------------------------------ internals
     def _materialize(self, batch: InFlightBatch) -> None:
         with obs.span("materialize", batch_seq=batch.seq):
-            materialize(batch, self.cache, self.clocks)
+            materialize(batch, self.cache, self.clocks, self.stats)
         try:
             self._in_flight.remove(batch)
         except ValueError:

@@ -143,6 +143,10 @@ class RegionAllocator:
     # -------------------------------------------------------------- stats
     @property
     def stats(self) -> dict:
+        """Serving tallies: request/batch/cache counts plus the PR 9
+        solver and deadline aggregates (`cells_solved`, `cells_converged`,
+        `deadline_hits`/`deadline_requests`, and `solver_counters` — summed
+        bcd_iters/sp1_evals/sp2_evals across every materialized batch)."""
         return self.pipeline.stats
 
     @property

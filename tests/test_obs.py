@@ -382,3 +382,74 @@ def test_noop_recorder_overhead_under_2_percent():
     assert overhead < 0.02 * wall, (
         f"no-op telemetry {overhead * 1e6:.1f}us over {n_sites} sites vs "
         f"{wall * 1e3:.1f}ms serve wall ({overhead / wall:.2%})")
+
+
+# ---------------------------------------------------------------------------
+# Histogram non-finite guard + background JsonlRecorder (PR 9 satellites)
+# ---------------------------------------------------------------------------
+
+def test_histogram_drops_non_finite():
+    h = obs.Histogram("lat")
+    h.observe(0.01)
+    h.observe(float("nan"))
+    h.observe(float("inf"))
+    h.observe(float("-inf"))
+    h.observe(0.02)
+    assert h.count == 2
+    assert h.dropped == 3
+    assert h.sum == pytest.approx(0.03)
+    assert math.isfinite(h.percentile(50))
+    # the exporters surface the drop count instead of hiding it
+    reg = obs.MetricsRegistry()
+    hh = reg.histogram("lat")
+    hh.observe(1.0)
+    hh.observe(float("nan"))
+    text = obs.prometheus_text(reg)
+    assert "lat_dropped_total 1" in text
+    rec = next(r for r in obs.metrics_jsonl(reg) if r["kind"] == "histogram")
+    assert rec["dropped"] == 1
+
+
+def test_histogram_observe_many_mixed_finiteness():
+    h = obs.Histogram("lat")
+    h.observe_many([0.001, float("nan"), 0.002, float("inf")])
+    assert h.count == 2 and h.dropped == 2
+
+
+def test_jsonl_recorder_background_flush(tmp_path):
+    """Events written through the bounded queue land on disk, in emit
+    order, once the recorder closes (recording() closes it)."""
+    path = str(tmp_path / "bg.jsonl")
+    with obs.recording(obs.JsonlRecorder(path)):
+        for i in range(500):
+            obs.point("evt", i=i)
+    events = obs.read_jsonl(path)
+    assert [e["i"] for e in events] == list(range(500))
+
+
+def test_jsonl_recorder_drops_when_queue_full(tmp_path):
+    """A stalled writer (deterministically held by the test gate) makes
+    emits drop instead of blocking; the drops are counted locally and in
+    the global obs_events_dropped counter; close() still flushes what
+    queued."""
+    path = str(tmp_path / "drop.jsonl")
+    rec = obs.JsonlRecorder(path, queue_size=4)
+    base = obs.counter("obs_events_dropped").value
+    rec._drain_gate.clear()              # stall the writer
+    # let the writer park on the gate holding one dequeued event
+    rec.emit({"i": -1})
+    deadline = time.perf_counter() + 5.0
+    while rec._queue.qsize() and time.perf_counter() < deadline:
+        time.sleep(0.001)
+    for i in range(4):                   # refill the queue exactly
+        rec.emit({"i": i})
+    rec.emit({"i": 99})                  # queue full -> dropped
+    rec.emit({"i": 100})
+    assert rec.dropped_events == 2
+    assert obs.counter("obs_events_dropped").value == base + 2
+    rec._drain_gate.set()
+    rec.close()
+    got = [e["i"] for e in obs.read_jsonl(path)]
+    assert got == [-1, 0, 1, 2, 3]
+    rec.emit({"i": 101})                 # emit-after-close counts as drop
+    assert rec.dropped_events == 3

@@ -208,3 +208,65 @@ def test_mesh_deadline_matches_unsharded_fleet():
                                           np.asarray(base.iters))
             assert reg.fleet.columns == base.columns   # fixed-T ledger kept
             assert reg.stats["cells"] == 6
+
+
+# ---------------------------------------------------------------------------
+# per-shard solver-counter aggregation (RegionResult.stats)
+# ---------------------------------------------------------------------------
+
+def test_region_stats_per_shard_counters_sum_to_fleet():
+    """RegionResult.stats carries a per-shard aggregation of the device
+    counters; summed over shards it must reproduce the unsharded fleet's
+    totals. bcd_iters is exact (iters parity is bit-for-bit); the dual-eval
+    effort counters ride the data-dependent early exit, so shard_map mode
+    gets an integer slack of a few evals per cell."""
+    C = 6
+    fleet = _fleet(C=C, N=12, seed=13)
+    w = Weights(0.5, 0.5, 1.0)
+    base = allocate_fleet(fleet, w, max_iters=6)
+    assert base.counters is not None
+    ctr = np.asarray(base.counters.data)           # (C, 4)
+    for lockstep in (True, False):
+        reg = allocate_region(fleet, w, max_iters=6, lockstep=lockstep)
+        st = reg.stats
+        D = st["mesh_devices"]
+        for k in ("shard_bcd_iters", "shard_sp1_evals", "shard_sp2_evals",
+                  "shard_residual_max"):
+            assert len(st[k]) == D, (k, st[k])
+        # totals are the shard sums by construction
+        for col, key in ((0, "bcd_iters"), (1, "sp1_evals"),
+                         (2, "sp2_evals")):
+            assert st[f"{key}_total"] == pytest.approx(
+                sum(st[f"shard_{key}"]))
+        assert st["bcd_iters_total"] == pytest.approx(
+            float(np.nansum(ctr[:, 0])))
+        slack = 4 * C                              # early-exit attribution
+        assert abs(st["sp1_evals_total"]
+                   - float(np.nansum(ctr[:, 1]))) <= slack
+        assert abs(st["sp2_evals_total"]
+                   - float(np.nansum(ctr[:, 2]))) <= slack
+        assert st["residual_max"] == pytest.approx(
+            float(np.nanmax(ctr[:, 3])), rel=1e-6)
+
+
+def test_region_shard_blocks_match_mesh_layout():
+    """Shard attribution follows the contiguous ceil(C/D) block layout of
+    `place_cells`: recomputing the blocks host-side from the unsharded
+    counters reproduces every per-shard entry (pad cells contribute 0)."""
+    mesh = region_mesh()
+    D = int(mesh.devices.size)
+    C = max(2 * D - 1, 3)                          # force padding when D>1
+    fleet = _fleet(C=C, N=10, seed=17)
+    w = Weights(0.5, 0.5, 1.0)
+    reg = allocate_region(fleet, w, max_iters=6, mesh=mesh, lockstep=True)
+    ctr = np.asarray(reg.fleet.counters.data)      # (C, 4) sharded result
+    block = -(-C // D)
+    pad = np.zeros((block * D - C, 4))
+    blocks = np.concatenate([ctr, pad]).reshape(D, block, 4)
+    st = reg.stats
+    np.testing.assert_allclose(st["shard_bcd_iters"],
+                               np.nansum(blocks[..., 0], axis=1))
+    np.testing.assert_allclose(st["shard_sp1_evals"],
+                               np.nansum(blocks[..., 1], axis=1))
+    np.testing.assert_allclose(st["shard_sp2_evals"],
+                               np.nansum(blocks[..., 2], axis=1))

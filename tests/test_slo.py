@@ -1,0 +1,389 @@
+"""SLO plane + wire surface + profiling (PR 9): burn-rate window math on
+logical clocks, the latency-threshold bucket snap, the HTTP scrape
+endpoints round-tripped through the Prometheus text parser, SLO verdicts
+over a live pipelined serve trace, the zero-new-compiles guard with the
+whole plane installed, and the XLA trace/cost profiling helpers.
+"""
+import json
+import math
+import os
+import time
+import urllib.error
+import urllib.request
+import warnings
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from repro import (AllocationRequest, Problem, RegionAllocator, SolverSpec,
+                   Weights, make_fleet, make_system, obs)
+from repro.obs import (BurnWindow, DEFAULT_WINDOWS, LatencyObjective,
+                       MetricsServer, RatioObjective, SLO, SloPlane,
+                       default_slos, parse_prometheus_text,
+                       prometheus_text)
+
+W = Weights(0.5, 0.5, 1.0)
+_SPEC = SolverSpec(max_iters=4, tol=1e-4)
+
+
+def _get(url: str):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.status, resp.headers.get("Content-Type"), resp.read()
+
+
+# ---------------------------------------------------------------------------
+# burn-rate window math (logical clocks, exact values)
+# ---------------------------------------------------------------------------
+
+_WINDOWS = (BurnWindow("fast", 10.0, 1.0), BurnWindow("slow", 100.0, 0.5))
+
+
+def _ratio_plane(objective=0.9):
+    reg = obs.MetricsRegistry()
+    slo = SLO("hit_rate", objective,
+              RatioObjective("good", "total"), _WINDOWS)
+    return reg, SloPlane([slo], registry=reg)
+
+
+def test_burn_rate_exact_and_multi_window_and():
+    # objective 0.5: the error budget is exactly representable, so the
+    # burn == max_burn_rate boundary below is exact, not epsilon-luck
+    reg, plane = _ratio_plane(objective=0.5)
+    plane.observe(now=0.0)
+    reg.counter("total").inc(100)
+    reg.counter("good").inc(75)           # bad ratio 0.25 -> burn 0.5
+    [v] = plane.check(now=10.0)
+    by = {w["name"]: w for w in v["windows"]}
+    assert by["fast"]["burn_rate"] == pytest.approx(0.5)
+    assert by["slow"]["burn_rate"] == pytest.approx(0.5)
+    # breach is strict: burn == max_burn_rate (slow: 0.5) is not a breach
+    assert not by["slow"]["breach"] and v["verdict"] == "ok"
+    assert v["good_ratio"] == pytest.approx(0.75)
+    assert v["budget_remaining"] == pytest.approx(0.5)
+
+    reg.counter("total").inc(100)         # all 100 bad: cumulative 125/200
+    [v] = plane.check(now=12.0)
+    by = {w["name"]: w for w in v["windows"]}
+    # fast window start t=2: nearest sample not newer is t=0 (all history)
+    assert by["fast"]["burn_rate"] == pytest.approx(1.25)
+    assert by["fast"]["breach"] and by["slow"]["breach"]
+    assert v["verdict"] == "breach"
+    assert reg.gauge("slo_breaching", slo="hit_rate").value == 1.0
+    assert reg.gauge("slo_burn_rate", slo="hit_rate",
+                     window="fast").value == pytest.approx(1.25)
+
+
+def test_burn_rate_windows_difference_correct_samples():
+    """The fast window must difference against the newest sample at least
+    `seconds` old — NOT the whole history — once the ring spans it."""
+    reg, plane = _ratio_plane()
+    plane.observe(now=0.0)
+    reg.counter("total").inc(100)         # 100 bad before t=50
+    plane.observe(now=50.0)
+    reg.counter("total").inc(100)
+    reg.counter("good").inc(100)          # 100 good after t=50
+    [v] = plane.check(now=61.0)
+    by = {w["name"]: w for w in v["windows"]}
+    # fast (start 51): delta vs the t=50 sample -> all good, burn 0
+    assert by["fast"]["burn_rate"] == pytest.approx(0.0)
+    # slow (start -39): falls back to the oldest sample -> 100/200 bad
+    assert by["slow"]["burn_rate"] == pytest.approx(5.0)
+    # warn: some but not all windows breach
+    assert v["verdict"] == "warn"
+    assert reg.gauge("slo_breaching", slo="hit_rate").value == 0.0
+
+
+def test_no_data_and_idle_traffic_verdicts():
+    reg, plane = _ratio_plane()
+    [v] = plane.check(now=0.0)
+    assert v["verdict"] == "no_data"
+    assert v["good_ratio"] is None and v["budget_remaining"] is None
+    assert all(w["burn_rate"] == 0.0 for w in v["windows"])
+    reg.counter("total").inc(10)
+    reg.counter("good").inc(10)
+    [v] = plane.check(now=1.0)
+    assert v["verdict"] == "ok"
+    # traffic stops: every later window burns at 0, verdict stays ok
+    [v] = plane.check(now=500.0)
+    assert v["verdict"] == "ok"
+    assert all(w["burn_rate"] == 0.0 for w in v["windows"])
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError):
+        SLO("bad", 1.0, RatioObjective("g", "t"))
+    with pytest.raises(ValueError):
+        SloPlane([SLO("dup", 0.9, RatioObjective("g", "t")),
+                  SLO("dup", 0.9, RatioObjective("g2", "t2"))])
+
+
+def test_latency_objective_threshold_snaps_up():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("lat")
+    bounds = h.bounds
+    i = int(np.searchsorted(bounds, 0.5))
+    edge = bounds[i]                      # the snapped threshold
+    assert edge >= 0.5 and edge / 0.5 < 1.08
+    h.observe(edge * 0.999)               # good under the snapped edge
+    h.observe(edge * 1.001)               # bad: next bucket up
+    h.observe(0.001)
+    obj = LatencyObjective("lat", 0.5)
+    good, total = obj.counts(reg)
+    assert (good, total) == (2.0, 3.0)
+    # a threshold above the whole layout counts everything good
+    good, total = LatencyObjective("lat", bounds[-1] * 10).counts(reg)
+    assert (good, total) == (3.0, 3.0)
+
+
+def test_default_slos_shape():
+    slos = default_slos()
+    assert [s.name for s in slos] == ["serve_latency_p99",
+                                      "deadline_hit_rate",
+                                      "bcd_convergence"]
+    assert all(s.windows == DEFAULT_WINDOWS for s in slos)
+
+
+# ---------------------------------------------------------------------------
+# wire surface: scrape endpoints + Prometheus text parser round-trip
+# ---------------------------------------------------------------------------
+
+def test_http_scrape_roundtrip():
+    reg = obs.MetricsRegistry()
+    reg.counter("req", stage="plan").inc(3)
+    reg.gauge("depth").set(2)
+    reg.histogram("lat").observe_many([0.001, 0.004, 2.0])
+    with MetricsServer(registry=reg) as srv:
+        status, ctype, body = _get(srv.url("/metrics"))
+        assert status == 200 and ctype.startswith("text/plain")
+        parsed = parse_prometheus_text(body.decode())
+        # the scrape's own counter is in the scrape it served
+        assert parsed[("obs_scrapes_total",
+                       (("path", "/metrics"),))] == 1.0
+        # byte-for-byte agreement with the in-process exporter
+        assert parsed == parse_prometheus_text(prometheus_text(reg))
+        assert parsed[("req_total", (("stage", "plan"),))] == 3.0
+        assert parsed[("lat_count", ())] == 3.0
+
+        status, ctype, body = _get(srv.url("/healthz"))
+        hz = json.loads(body)
+        assert status == 200 and hz["status"] == "ok"
+        assert hz["uptime_s"] >= 0.0
+
+        status, _, body = _get(srv.url("/slo"))
+        assert status == 200 and json.loads(body) == {"slos": []}
+
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get(srv.url("/nope"))
+        assert err.value.code == 404
+        assert "/metrics" in err.value.read().decode()
+    assert not srv.running
+
+
+def test_http_slo_endpoint_serves_verdicts():
+    reg, plane = _ratio_plane()
+    reg.counter("total").inc(50)
+    reg.counter("good").inc(49)
+    with MetricsServer(registry=reg, slo_plane=plane) as srv:
+        _, _, body = _get(srv.url("/slo"))
+        slos = json.loads(body)["slos"]
+        assert [s["name"] for s in slos] == ["hit_rate"]
+        assert slos[0]["verdict"] in ("ok", "warn", "breach")
+        assert slos[0]["total"] == 50.0
+        # the check() behind the scrape published its gauges too
+        _, _, body = _get(srv.url("/metrics"))
+        parsed = parse_prometheus_text(body.decode())
+        assert ("slo_good_ratio", (("slo", "hit_rate"),)) in parsed
+
+
+def test_parse_prometheus_text_rejects_garbage():
+    assert parse_prometheus_text("# HELP x\n\n") == {}
+    with pytest.raises(ValueError):
+        parse_prometheus_text("!!! not a sample line\n")
+
+
+# ---------------------------------------------------------------------------
+# live pipelined serve: SLO verdicts + scrape during traffic, compile guard
+# ---------------------------------------------------------------------------
+
+def _mk_cells(sizes, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [(f"cell{i}-{n}", make_system(jax.random.fold_in(key, i),
+                                         n_devices=n))
+            for i, n in enumerate(sizes)]
+
+
+def _serve_deadlined(cells, deadline_slack=60.0):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        svc = RegionAllocator(W, cells_per_batch=2, min_bucket=8,
+                              spec=_SPEC)
+        now = time.monotonic()
+        for cid, s in cells:
+            svc.submit(AllocationRequest(cell_id=cid, sys=s,
+                                         deadline=now + deadline_slack))
+        return svc.flush()
+
+
+def test_live_serve_slo_verdicts_and_scrape():
+    cells = _mk_cells([5, 7, 8, 9], seed=3)
+    plane = SloPlane(default_slos())      # global registry: the real wiring
+    plane.observe()
+    base = obs.counter("region_deadline_requests").value
+    with MetricsServer(slo_plane=plane) as srv:
+        responses = _serve_deadlined(cells)
+        assert len(responses) == len(cells)
+        _, _, body = _get(srv.url("/metrics"))
+        parsed = parse_prometheus_text(body.decode())
+        assert parsed[("region_deadline_requests_total", ())] \
+            == base + len(cells)
+        assert parsed[("region_solve_cells_total", ())] > 0
+        _, _, body = _get(srv.url("/slo"))
+        slos = {s["name"]: s for s in json.loads(body)["slos"]}
+        assert set(slos) == {"serve_latency_p99", "deadline_hit_rate",
+                             "bcd_convergence"}
+        dl = slos["deadline_hit_rate"]
+        assert dl["total"] >= len(cells) and dl["verdict"] != "no_data"
+        assert slos["bcd_convergence"]["verdict"] != "no_data"
+        for s in slos.values():
+            for w in s["windows"]:
+                assert math.isfinite(w["burn_rate"])
+
+
+def test_pipeline_stats_carry_solver_and_deadline_tallies():
+    cells = _mk_cells([5, 7], seed=5)
+    svc_stats = None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        svc = RegionAllocator(W, cells_per_batch=2, min_bucket=8,
+                              spec=_SPEC)
+        now = time.monotonic()
+        svc.submit(AllocationRequest(cell_id=cells[0][0], sys=cells[0][1],
+                                     deadline=now + 60.0))
+        svc.submit(AllocationRequest(cell_id=cells[1][0], sys=cells[1][1],
+                                     deadline=now - 1.0))   # already late
+        svc.flush()
+        svc_stats = svc.stats
+    assert svc_stats["cells_solved"] == 2
+    assert 0 <= svc_stats["cells_converged"] <= 2
+    assert svc_stats["deadline_requests"] == 2
+    assert svc_stats["deadline_hits"] == 1
+    ctr = svc_stats["solver_counters"]
+    assert ctr["bcd_iters"] > 0 and ctr["sp2_evals"] > 0
+
+
+def test_slo_plane_and_scrape_add_no_compiles(compile_counter):
+    cells = _mk_cells([5, 7, 8, 9], seed=7)
+    _serve_deadlined(cells)               # warm-up: all compilation here
+    _serve_deadlined(cells)
+    before = compile_counter.count
+    plane = SloPlane(default_slos())
+    with MetricsServer(slo_plane=plane) as srv:
+        plane.observe()
+        _serve_deadlined(cells)
+        _get(srv.url("/metrics"))
+        _get(srv.url("/slo"))
+        plane.check()
+    assert compile_counter.count == before, (
+        f"SLO/scrape plane triggered {compile_counter.count - before} "
+        f"recompiles")
+
+
+# ---------------------------------------------------------------------------
+# profiling plane: trace sessions + compiled-cost gauges
+# ---------------------------------------------------------------------------
+
+def test_profile_trace_session(tmp_path):
+    import jax.numpy as jnp
+    from repro.obs import profile
+
+    reg = obs.MetricsRegistry()
+    logdir = str(tmp_path / "trace")
+    rec = obs.MemoryRecorder()
+    with obs.recording(rec):
+        with profile.trace(logdir, label="unit", registry=reg) as d:
+            assert d == logdir
+            with profile.trace(logdir, registry=reg) as nested:
+                assert nested is None     # one session at a time
+            jnp.dot(jnp.ones((32, 32)), jnp.ones((32, 32))).block_until_ready()
+    assert reg.gauge("profiler_trace_seconds", label="unit").value > 0.0
+    assert reg.counter("profiler_traces").value == 1.0
+    assert any(e["name"] == "profile" for e in rec.events)
+    assert os.listdir(logdir)             # the trace artifact exists
+
+
+def test_record_cost_gauges(tmp_path):
+    import jax.numpy as jnp
+    from repro.obs import profile
+
+    reg = obs.MetricsRegistry()
+
+    def f(x):
+        return jnp.dot(x, x)
+
+    cost = profile.record_cost("dot.64", f, jnp.ones((64, 64)),
+                               registry=reg)
+    if cost is None:
+        pytest.skip("backend has no cost model")
+    assert cost["flops"] > 0
+    assert reg.gauge("xla_cost_flops", shape="dot.64").value == cost["flops"]
+    assert reg.gauge("xla_cost_bytes",
+                     shape="dot.64").value == cost["bytes_accessed"]
+
+
+def test_solve_cost_shapes_and_guardrails():
+    from repro.dynamics import RoundsConfig
+    from repro.obs import profile
+
+    reg = obs.MetricsRegistry()
+    sysp = make_system(jax.random.PRNGKey(0), n_devices=6)
+    cost = profile.solve_cost(Problem(system=sysp, weights=W),
+                              spec=_SPEC, registry=reg)
+    if cost is not None:
+        assert cost["flops"] > 0
+        assert reg.gauge("xla_cost_flops", shape="solve.bcd.N6").value > 0
+
+    fleet = make_fleet(jax.random.PRNGKey(1), n_cells=3, n_devices=6)
+    cost = profile.solve_cost(Problem(system=fleet, weights=W),
+                              spec=_SPEC, registry=reg)
+    if cost is not None:
+        assert reg.gauge("xla_cost_flops",
+                         shape="solve.fleet.C3.N6").value > 0
+
+    with pytest.raises(ValueError):
+        profile.solve_cost(
+            Problem(system=sysp, weights=W,
+                    rounds=RoundsConfig(rounds=2),
+                    key=jax.random.PRNGKey(2)), spec=_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# compare.py --slo verdict gate
+# ---------------------------------------------------------------------------
+
+def test_compare_slo_gate():
+    import pathlib
+    import sys as _sys
+    _sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+    try:
+        from benchmarks.compare import parse_derived, slo_regressions
+    finally:
+        _sys.path.pop(0)
+    base = parse_derived("slo_breaches=0;slo_deadline_hit_rate_ok=1;"
+                         "slo_bcd_convergence_ok=1;deadline_hit_rate=1.000")
+    good = parse_derived("slo_breaches=0;slo_deadline_hit_rate_ok=1;"
+                         "slo_bcd_convergence_ok=1;deadline_hit_rate=0.979")
+    assert slo_regressions("slo.serve.R48", good, base) == []
+    bad = parse_derived("slo_breaches=2;slo_deadline_hit_rate_ok=0;"
+                        "slo_bcd_convergence_ok=1")
+    msgs = slo_regressions("slo.serve.R48", bad, base)
+    assert len(msgs) == 2
+    assert any("slo_breaches" in m for m in msgs)
+    assert any("slo_deadline_hit_rate_ok" in m for m in msgs)
+    # a flag the baseline never had (new SLO) is not a regression
+    extra = parse_derived("slo_breaches=0;slo_deadline_hit_rate_ok=1;"
+                          "slo_bcd_convergence_ok=1;slo_new_ok=0")
+    assert slo_regressions("slo.serve.R48", extra, base) == []
