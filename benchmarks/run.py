@@ -915,6 +915,49 @@ def sp1_sweep_scale():
          f"T_rel_err={rel:.2e}")
 
 
+def autodiff():
+    """Implicit-KKT gradient overhead (PR 10): `diff.solve_and_grad` vs the
+    forward `solve()` on the same spec/shape. The differentiable path
+    re-runs the fixed point under one linearization and pulls 4 metric
+    cotangents through the Neumann adjoint, so the budget is <= 3x a
+    forward solve — exported as an `slo_grad_overhead_ok` flag for the
+    compare.py --slo/--strict gate. A second row times the 17-point
+    Pareto weight sweep (one vmapped fleet program)."""
+    from repro.diff import pareto_sweep, solve_and_grad
+
+    key = jax.random.PRNGKey(7)
+    sysp = make_system(key, n_devices=N_DEV)
+    prob = Problem(system=sysp, weights=Weights(0.5, 0.5, 0.3))
+    spec = SolverSpec(sp1_method="bisect", tol=1e-5, max_iters=200)
+
+    r = solve(prob, spec)                                  # compile both
+    jax.block_until_ready(r.objective)
+    g = solve_and_grad(prob, spec)
+    jax.block_until_ready(g.value["objective"])
+
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(solve(prob, spec).objective)
+    fwd_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(solve_and_grad(prob, spec).value["objective"])
+    grad_s = (time.time() - t0) / reps
+    overhead = grad_s / max(fwd_s, 1e-9)
+    _row(f"autodiff.grad_overhead.N{N_DEV}", t0, t0 + grad_s,
+         f"fwd_ms={1e3 * fwd_s:.2f};grad_ms={1e3 * grad_s:.2f};"
+         f"overhead={overhead:.2f}x;"
+         f"slo_grad_overhead_ok={1 if overhead <= 3.0 else 0}")
+
+    t0 = time.time()
+    sweep = pareto_sweep(prob, spec, n=17)
+    t1 = time.time()
+    _row("autodiff.pareto_sweep.n17", t0, t1,
+         f"front_points={int(sweep.front.sum())};"
+         f"converged={int(np.asarray(sweep.converged).sum())}/17")
+
+
 def roofline_table():
     """Dry-run roofline summary (reads dryrun_baseline.jsonl if present)."""
     import os
@@ -958,6 +1001,25 @@ def ablations():
          f"with_split={float(total_energy(sysp, with_split.allocation)):.4g}J;"
          f"stuck_baseline~scheme1={float(total_energy(sysp, s1)):.4g}J")
 
+    # (b2) SP2-direct dual search: Newton polish on the pmin-branch
+    # stationarity vs the bisection-only carried bracket (PR 10 satellite;
+    # gated by the measured dE/dB eval counter the ledger already carries)
+    from repro.core.energy import t_cmp
+    from repro.core.sp2 import _sp2_direct_impl, r_min
+
+    sys_n = make_system(jax.random.PRNGKey(11), n_devices=50,
+                        bandwidth_total=20e6)
+    f_n = jnp.full((50,), 1e9)
+    s_n = jnp.full((50,), 320.0)
+    rmin = r_min(sys_n, f_n, s_n,
+                 jnp.asarray(float(jnp.max(t_cmp(sys_n, f_n, s_n))) * 1.1))
+    t0 = time.time()
+    _, _, ev_newton = _sp2_direct_impl(sys_n, rmin, True, True)
+    _, _, ev_bisect = _sp2_direct_impl(sys_n, rmin, True, False)
+    _row("ablation.sp2_newton", t0, time.time(),
+         f"newton_evals={int(ev_newton)};bisect_evals={int(ev_bisect)};"
+         f"saved={int(ev_bisect) - int(ev_newton)}")
+
     # (c) accuracy model: linear (paper) vs concave log fit
     t0 = time.time()
     r_lin = solve(Problem(system=sysp, weights=Weights(0.5, 0.5, 40.0)),
@@ -986,6 +1048,7 @@ BENCHES = {
     "xla_cost": xla_cost,
     "assoc_mobility": assoc_mobility,
     "sp1_sweep": sp1_sweep_scale,
+    "autodiff": autodiff,
     "ablations": ablations,
     "roofline": roofline_table,
 }

@@ -52,7 +52,10 @@ still works, delegates verbatim (bit-identical results), and warns
 Subpackages: `repro.core` (paper model + jitted solvers), `repro.region`
 (bucketed, mesh-sharded serving), `repro.dynamics` (round engine +
 mobility traces), `repro.assoc` (cross-cell user association),
-`repro.fl` (FedAvg coupling), `repro.kernels` (Pallas kernels).
+`repro.fl` (FedAvg coupling), `repro.kernels` (Pallas kernels),
+`repro.diff` (implicit-KKT gradients: `solve_and_grad`, weight
+auto-tuning, Pareto sweeps, learned accuracy surrogates),
+`repro.obs` (telemetry: spans, metrics, SLO plane, scrape endpoint).
 """
 from repro.api import (Problem, SolverSpec, TolFloorWarning, WeightsLike,
                        rel_step_floor, solve, weights_leaf)

@@ -93,3 +93,30 @@ def log_fit(resolutions=FIG7_RESOLUTIONS, maps=FIG7_MAP_YOLOV5M) -> LogAccuracy:
     y = np.asarray(maps)
     b, a = np.polyfit(x, y, 1)
     return LogAccuracy(a=float(a), b=float(b), s0=float(resolutions[0]))
+
+
+def menu_of(acc, default=FIG7_RESOLUTIONS) -> tuple:
+    """The resolution menu an accuracy model was fitted on.
+
+    Models that carry their own operating points (e.g. a fitted
+    `repro.diff.surrogate.SurrogateAccuracy`) expose a `menu` attribute;
+    everything else falls back to the paper's Fig. 7 grid."""
+    menu = getattr(acc, "menu", None)
+    return tuple(float(m) for m in menu) if menu else tuple(default)
+
+
+def system_with_menu(sys, acc):
+    """Re-key a `SystemParams` to the accuracy model's own resolution menu.
+
+    `round_resolution` and `fl.simulator.map_resolution_to_dataset` snap
+    onto `sys.resolutions`; a model fitted on a non-default menu must
+    therefore travel WITH its menu or the solve silently re-snaps s to the
+    Fig. 7 grid. Models without an attached menu leave the system
+    untouched (no recompile: `resolutions` only changes when the menu
+    genuinely differs)."""
+    menu = getattr(acc, "menu", None)
+    if not menu:
+        return sys
+    menu = tuple(float(m) for m in menu)
+    return sys if menu == tuple(sys.resolutions) \
+        else sys.replace(resolutions=menu)

@@ -81,6 +81,20 @@ def _f_of_lambda(sys: SystemParams, w: Weights, lam: Array) -> Array:
     return jnp.clip(f_unc, sys.f_min, sys.f_max)
 
 
+def _f_of_lambda_diff(sys: SystemParams, w: Weights, lam: Array) -> Array:
+    """Value-identical (to 1 ulp) to `_f_of_lambda`, gradient-safe.
+
+    The fused form cbrt(lam / denom) backpropagates -lam / denom^2, and
+    denom = 2 w1 Rg kappa ~ 1e-27 underflows f32 when squared — every
+    kappa/w1 cotangent becomes inf. Splitting the cbrt keeps the vjp on
+    the cbrt scale (denom^(4/3) ~ 1e-36, representable), so the diff path
+    (`sp1_stationarity`, `repro.diff`) uses this variant."""
+    tiny = jnp.finfo(jnp.asarray(lam).dtype).tiny
+    denom = jnp.maximum(2.0 * w.w1 * sys.global_rounds * sys.kappa, tiny)
+    f_unc = jnp.cbrt(lam) / jnp.cbrt(denom)
+    return jnp.clip(f_unc, sys.f_min, sys.f_max)
+
+
 def _s_of_lambda(sys: SystemParams, w: Weights, acc: AccuracyModel, lam: Array) -> Array:
     """Solve s*(2 a f^2 + 2 lam q / f) = rho A'(s) on [s_lo, s_hi]."""
     alpha, q = _coeffs(sys, w)
@@ -116,6 +130,87 @@ def _makespan_of_lambda(sys: SystemParams, w: Weights, acc: AccuracyModel,
     f = _f_of_lambda(sys, w, lam)
     s = _s_of_lambda(sys, w, acc, lam)
     return q * s ** 2 / jnp.maximum(f, 1e-9) + tt
+
+
+def _s_of_lambda_diff(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                      lam: Array, f: Array | None = None) -> Array:
+    """Differentiable s*(lambda).
+
+    For `LinearAccuracy` the closed form in `_s_of_lambda` is already smooth,
+    so it is returned as-is. For generic accuracy models the fixed-iteration
+    bisection has zero derivative, so the root is re-expressed as one Newton
+    correction of the stop-gradient bisection solution: equal in value to
+    solver precision, with the exact implicit-function-theorem derivative.
+    Lanes clipped at the static [s_lo, s_hi] box keep the (constant) bound.
+
+    `f` optionally supplies a precomputed (possibly lane-guarded) CPU
+    frequency; callers that must avoid `_f_of_lambda`'s cbrt at lam = 0
+    (infinite derivative) pass the guarded value — see `sp1_stationarity`.
+    """
+    alpha, q = _coeffs(sys, w)
+    if f is None:
+        f = _f_of_lambda_diff(sys, w, lam)
+    psi = 2.0 * alpha * f ** 2 + 2.0 * lam * q / jnp.maximum(f, 1e-9)
+
+    if isinstance(acc, LinearAccuracy):
+        # floor at sqrt(tiny), not tiny: the division's vjp squares the
+        # denominator, and tiny**2 underflows to 0 — a zero-coefficient
+        # (padded) lane with psi = 0 would then emit 0 * inf = NaN through
+        # the clip. Any psi below sqrt(tiny) clips to s_hi either way, so
+        # the primal matches `_s_of_lambda` bit-for-bit.
+        dt = jnp.asarray(psi).dtype
+        s_unc = w.rho * acc.slope / jnp.maximum(
+            psi, jnp.sqrt(jnp.finfo(dt).tiny))
+        return jnp.clip(s_unc, sys.s_lo, sys.s_hi)
+
+    s0 = lax.stop_gradient(_s_of_lambda(sys, w, acc, lam))
+    h = s0 * psi - w.rho * acc.deriv(s0)          # traced residual at s0
+    # h'(s) = psi - rho A''(s) > 0 (A concave), evaluated under stop-grad;
+    # A'' per-element via a diagonal jvp of acc.deriv
+    _, d2A = jax.jvp(acc.deriv, (s0,), (jnp.ones_like(s0),))
+    hp = lax.stop_gradient(psi) - w.rho * lax.stop_gradient(d2A)
+    hp = jnp.maximum(hp, jnp.finfo(s0.dtype).tiny)
+    eps = 1e-9
+    interior = (s0 > sys.s_lo * (1.0 + eps)) & (s0 < sys.s_hi * (1.0 - eps))
+    return jnp.where(interior, s0 - h / hp, s0)
+
+
+def sp1_stationarity(sys: SystemParams, w: Weights, acc: AccuracyModel,
+                     lam: Array, T: Array, tt: Array, mask: Array | None = None):
+    """SP1 KKT residuals at a candidate dual point (lam, T).
+
+    Returns `(r_n, r_sum)` where `r_n = M_n(lam_n) - T` (per-device makespan
+    equalization, meaningful on the active set lam_n > 0) and
+    `r_sum = sum_n lam_n - w2 Rg` (dual budget, eq. (18)). Both residuals are
+    differentiable in (lam, T, tt), the `SystemParams` leaves, and the
+    weights — the resolution subproblem inside M_n goes through
+    `_s_of_lambda_diff`. Exported for `repro.diff.implicit`, which corrects
+    the stop-gradient bisection solve with one arrowhead Newton step on
+    exactly these residuals.
+
+    `mask` (optional boolean per-device) restricts the traced system to the
+    SP1 active set: lanes outside it — lam_n = 0 fast lanes and padded
+    inactive lanes — hold f = f_min with zero one-sided derivative, carry
+    r_n = 0, and drop out of the dual budget sum. Required whenever any
+    lam_n = 0: `_f_of_lambda`'s cbrt has an infinite derivative at 0, and
+    even a zero cotangent times that is NaN.
+    """
+    _, q = _coeffs(sys, w)
+    if mask is None:
+        f = _f_of_lambda_diff(sys, w, lam)
+        s = _s_of_lambda_diff(sys, w, acc, lam, f=f)
+        r_n = q * s ** 2 / jnp.maximum(f, 1e-9) + tt - T
+        r_sum = jnp.sum(lam) - w.w2 * sys.global_rounds
+        return r_n, r_sum
+    lam_s = jnp.where(mask, lam, jnp.ones_like(lam))
+    f = _f_of_lambda_diff(sys, w, lam_s)
+    f = jnp.where(mask, f, jnp.asarray(sys.f_min, f.dtype))
+    s = _s_of_lambda_diff(sys, w, acc, lam_s, f=f)
+    r_n = jnp.where(mask, q * s ** 2 / jnp.maximum(f, 1e-9) + tt - T,
+                    jnp.zeros_like(lam))
+    r_sum = jnp.sum(jnp.where(mask, lam, jnp.zeros_like(lam))) \
+        - w.w2 * sys.global_rounds
+    return r_n, r_sum
 
 
 def _lambda_of_T(sys: SystemParams, w: Weights, acc: AccuracyModel,

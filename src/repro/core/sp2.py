@@ -285,6 +285,48 @@ def _denergy_dB(sys: SystemParams, rmin: Array, B: Array) -> Array:
     return jnp.where(on_rate, dE_rate, dE_clip)
 
 
+def _denergy2_dB2(sys: SystemParams, rmin: Array, B: Array) -> Array:
+    """d^2E_n/dB^2 for the boundary-power energy `_energy_of_B` — the exact
+    curvature of both branches of `_denergy_dB` (strictly positive: E is
+    convex on each branch, which is what makes the Newton dual search and
+    the implicit-gradient arrowhead solves below well-posed).
+
+      * rate branch:    E'' = (N0 d / (g rmin)) 2^x (x ln2)^2 / B,  x = rmin/B
+      * clipped branch: E'' = pc d (2 G'^2 - G'' G) / G^3,
+                        G'' = -t^2 / (ln2 B (1+t)^2),  t = g pc / (N0 B)
+
+    Used by the rtsafe-style Newton acceleration of `_sp2_direct_impl` and
+    as the interior-lane curvature in `repro.diff.implicit`'s KKT
+    linearization (parity-tested against `jax.grad` of `_denergy_dB`)."""
+    N0, g, d = sys.noise_psd, sys.gain, sys.bits
+    ln2 = jnp.log(2.0)
+    Bs = jnp.maximum(B, 1e-12)
+    x = rmin / Bs
+    ex = jnp.exp2(x)
+    p_rate = (ex - 1.0) * N0 * Bs / g
+    d2_rate = (N0 * d / (g * jnp.maximum(rmin, 1e-30))) \
+        * ex * (x * ln2) ** 2 / Bs
+    pc = jnp.where(p_rate < sys.p_min, sys.p_min, sys.p_max)
+    t = g * pc / (N0 * Bs)
+    L = jnp.log1p(t)
+    Gc = jnp.maximum(Bs * L / ln2, 1e-12)
+    Gp = (L - t / (1.0 + t)) / ln2
+    Gpp = -t ** 2 / (ln2 * Bs * (1.0 + t) ** 2)
+    d2_clip = pc * d * (2.0 * Gp ** 2 - Gpp * Gc) / Gc ** 3
+    on_rate = (p_rate >= sys.p_min) & (p_rate <= sys.p_max)
+    return jnp.where(on_rate, d2_rate, d2_clip)
+
+
+def sp2_stationarity(sys: SystemParams, rmin: Array, B: Array,
+                     mu: Array) -> Array:
+    """Per-lane KKT stationarity residual of the direct SP2 waterfilling:
+    psi_n = dE_n/dB(B_n) + mu (zero on interior lanes at the optimum;
+    positive when a lane is pinned at its rate floor b_min). Exported for
+    `repro.diff.implicit`, which linearizes this residual (with the
+    curvature `_denergy2_dB2`) to backpropagate through the SP2 solve."""
+    return _denergy_dB(sys, _clamp_rmin(sys, rmin), B) + mu
+
+
 def direct_eval_counts(dtype) -> int:
     """dE/dB evaluations per `solve_sp2_direct` dual search on the
     non-carried REFERENCE path (static): outer mu steps x inner
@@ -297,9 +339,9 @@ def direct_eval_counts(dtype) -> int:
     return outer * inner + inner + 1   # +1: the mu_hi bracket-sizing eval
 
 
-@partial(jax.jit, static_argnames=("carry_bracket",))
+@partial(jax.jit, static_argnames=("carry_bracket", "newton"))
 def _sp2_direct_impl(sys: SystemParams, rmin: Array,
-                     carry_bracket: bool = True
+                     carry_bracket: bool = True, newton: bool = True
                      ) -> Tuple[Array, Array, Array]:
     from jax import lax
 
@@ -330,6 +372,51 @@ def _sp2_direct_impl(sys: SystemParams, rmin: Array,
         # the final interval, which still brackets the box-clipped root
         return lax.fori_loop(0, iters,
                              lambda _, c: bisect_step(mu, *c), (lo, hi))
+
+    def search_B_newton(mu, lo, hi, x, ev, decide: bool):
+        # rtsafe-style safeguarded Newton on the smooth branches of the
+        # stationarity psi(B) = dE/dB(B) + mu, with the sign-bisection as
+        # the fallback whenever the Newton candidate leaves the bracket
+        # (at the rate/clipped-branch kink psi jumps, so the candidate
+        # aims past it and the midpoint takes over — degrading to exactly
+        # the safeguarded bisection). Every iteration evaluates the fused
+        # (psi, psi') pair once per lane, counted once in `ev` like the
+        # bisection's dE/dB eval. A lane converges when its accepted step
+        # falls below the reference precision `w_stop`; its bracket then
+        # collapses to the iterate, so the width-based exit, the certainty
+        # sums and the final midpoint all see the Newton root.
+        def cond(c):
+            lo, hi, _, it = c
+            undecided = jnp.any(hi - lo > w_stop) & (it < inner)
+            if decide:
+                sure = (jnp.sum(hi) < sys.bandwidth_total) \
+                    | (jnp.sum(lo) > sys.bandwidth_total)
+                return undecided & (~sure)
+            return undecided
+
+        def body(c):
+            lo, hi, x, it = c
+            psi = _denergy_dB(sys, rmin, x) + mu
+            dpsi = jnp.maximum(_denergy2_dB2(sys, rmin, x),
+                               jnp.finfo(x.dtype).tiny)
+            pos = psi >= 0.0
+            lo2 = jnp.where(pos, lo, x)
+            hi2 = jnp.where(pos, x, hi)
+            xn = x - psi / dpsi
+            good = (xn > lo2) & (xn < hi2)
+            x2 = jnp.where(good, xn, 0.5 * (lo2 + hi2))
+            # converge a factor below the bisection's terminal precision:
+            # the collapse pins the lane at the iterate, so its residual
+            # error must sit well under the reference path's w_stop for
+            # the 1e-6 objective-parity contract to hold at fleet sizes
+            conv = jnp.abs(x2 - x) <= 0.125 * w_stop
+            return (jnp.where(conv, x2, lo2), jnp.where(conv, x2, hi2),
+                    x2, it + 1)
+
+        lo, hi, x, it = lax.while_loop(
+            cond, body, (lo, hi, jnp.clip(x, lo, hi),
+                         jnp.zeros((), jnp.int32)))
+        return lo, hi, x, ev + it
 
     def search_B(mu, lo, hi, ev, decide: bool):
         # carried-bracket inner search: bisect until (a) every lane reaches
@@ -374,7 +461,31 @@ def _sp2_direct_impl(sys: SystemParams, rmin: Array,
     mu_lo0 = jnp.asarray(0.0, b_lo.dtype)
     ev0 = jnp.ones((), jnp.int32)   # the mu_hi sizing evaluation
 
-    if carry_bracket:
+    if carry_bracket and newton:
+        # Newton-accelerated carried path: same monotone (Blo, Bhi) bracket
+        # carry as below, plus the previous inner search's iterate carried
+        # as the next search's warm start — consecutive mu steps move B*
+        # little, so warm-started Newton typically lands in a couple of
+        # fused (psi, psi') evaluations where the bisection pays its full
+        # certainty-exit depth.
+        def bis(_, c):
+            mu_lo, mu_up, Blo, Bhi, Bx, ev = c
+            mid = 0.5 * (mu_lo + mu_up)
+            lo2, hi2, x2, ev = search_B_newton(mid, Blo, Bhi, Bx, ev,
+                                               decide=True)
+            over = jnp.sum(0.5 * (lo2 + hi2)) > sys.bandwidth_total
+            return (jnp.where(over, mid, mu_lo), jnp.where(over, mu_up, mid),
+                    jnp.where(over, Blo, lo2),   # mu ceiling fell: floor up
+                    jnp.where(over, hi2, Bhi),   # mu floor rose: ceiling dn
+                    x2, ev)
+
+        _, mu, Blo, Bhi, Bx, ev = lax.fori_loop(
+            0, outer, bis,
+            (mu_lo0, mu_hi, b_lo, b_hi, 0.5 * (b_lo + b_hi), ev0))
+        lo_f, hi_f, _, ev = search_B_newton(mu, Blo, Bhi, Bx, ev,
+                                            decide=False)
+        B_opt = 0.5 * (lo_f + hi_f)
+    elif carry_bracket:
         # B*(mu) is componentwise nonincreasing, so the mu interval
         # [mu_lo, mu_hi] always pins B*(mu) inside [B*(mu_hi), B*(mu_lo)]:
         # carry those bounds as (Blo, Bhi) and tighten the side whose mu
@@ -422,7 +533,8 @@ def _sp2_direct_impl(sys: SystemParams, rmin: Array,
 
 
 def solve_sp2_direct(sys: SystemParams, rmin: Array,
-                     carry_bracket: bool = True) -> Tuple[Array, Array]:
+                     carry_bracket: bool = True,
+                     newton: bool = True) -> Tuple[Array, Array]:
     """Globally exact SP2 solve via the boundary-power reformulation.
 
     carry_bracket=True (default) reuses the monotone-in-mu B bracket across
@@ -431,8 +543,14 @@ def solve_sp2_direct(sys: SystemParams, rmin: Array,
     dE/dB evaluation count several-fold at unchanged decision accuracy
     (measured count in the BCD ledger's `sp2_iters` column; reference count
     in `direct_eval_counts`). False keeps the full re-bisection per mu step
-    as the parity oracle (objective agreement <= 1e-6, tested)."""
-    p, B, _ = _sp2_direct_impl(sys, rmin, carry_bracket)
+    as the parity oracle (objective agreement <= 1e-6, tested).
+
+    newton=True (default) additionally warm-starts a safeguarded Newton
+    iteration on the smooth pmin/rate branches of the stationarity inside
+    each carried inner search (`_denergy2_dB2` curvature, sign-bisection
+    fallback at the branch kink); only the carried path is accelerated —
+    the reference path stays pure bisection as the parity oracle."""
+    p, B, _ = _sp2_direct_impl(sys, rmin, carry_bracket, newton)
     return p, B
 
 

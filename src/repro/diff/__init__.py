@@ -1,0 +1,18 @@
+"""Differentiable allocation: implicit KKT gradients through the BCD fixed
+point, weight auto-tuning against scalarized targets, Pareto-frontier
+sweeps over the weight simplex, and learned accuracy surrogates fitted from
+realized FL training curves. See ROADMAP "Differentiable allocation"."""
+from .implicit import (DEFAULT_WRT, METRICS, GradResult,  # noqa: F401
+                       solve_and_grad)
+from .pareto import (ParetoResult, pareto_front, pareto_sweep,  # noqa: F401
+                     weight_grid)
+from .surrogate import (SurrogateAccuracy, fit_from_training,  # noqa: F401
+                        fit_surrogate, problem_with_surrogate)
+from .tune import TuneResult, target_from_slos, tune_weights  # noqa: F401
+
+__all__ = [
+    "DEFAULT_WRT", "METRICS", "GradResult", "ParetoResult",
+    "SurrogateAccuracy", "TuneResult", "fit_from_training", "fit_surrogate",
+    "pareto_front", "pareto_sweep", "problem_with_surrogate",
+    "solve_and_grad", "target_from_slos", "tune_weights", "weight_grid",
+]

@@ -32,16 +32,26 @@ from repro.fl.server import FLRunResult, run_federated
 
 def map_resolution_to_dataset(sys: SystemParams, resolution: jax.Array,
                               dataset_resolutions: Sequence[int]) -> jax.Array:
-    """Map the allocator's s_n (pixels on the paper's 160..640 grid) onto the
-    dataset's rendering grid by index (s_bar_m <-> dataset_res_m).
+    """Map the allocator's s_n onto the dataset's rendering grid by
+    RELATIVE menu position (rank), not raw index.
+
+    The snap targets `sys.resolutions` — whatever menu the system actually
+    solves on, e.g. one attached by a fitted surrogate
+    (`repro.diff.surrogate`) — and the menu rank is then rescaled onto the
+    dataset grid, so a 6-point solver menu and a 4-point dataset grid still
+    correspond monotonically end to end. Menus of equal length reduce to
+    the historical index-for-index mapping exactly.
 
     Pure jnp (argmin snap onto the resolution menu), so it is jit-safe and
     usable inside a scan; returns an int32 array of dataset resolutions."""
     resolution = jnp.asarray(resolution)
     menu = jnp.asarray(sys.resolutions, resolution.dtype)
     idx = jnp.argmin(jnp.abs(resolution[..., None] - menu), axis=-1)
-    idx = jnp.minimum(idx, len(dataset_resolutions) - 1)
-    return jnp.take(jnp.asarray(dataset_resolutions, jnp.int32), idx)
+    n_menu = max(len(sys.resolutions) - 1, 1)
+    n_ds = len(dataset_resolutions) - 1
+    j = jnp.round(idx.astype(resolution.dtype) * (n_ds / n_menu))
+    return jnp.take(jnp.asarray(dataset_resolutions, jnp.int32),
+                    j.astype(jnp.int32))
 
 
 @dataclasses.dataclass

@@ -44,7 +44,7 @@ from .metrics import (
 )
 from .export import (prometheus_text, metrics_jsonl, write_metrics_jsonl,
                      parse_prometheus_text)
-from .slo import (SLO, SloPlane, BurnWindow, DEFAULT_WINDOWS,
+from .slo import (SLO, SloObserver, SloPlane, BurnWindow, DEFAULT_WINDOWS,
                   LatencyObjective, RatioObjective, default_slos)
 from .http import MetricsServer
 from . import profile
@@ -61,7 +61,7 @@ __all__ = [
     "prometheus_text", "metrics_jsonl", "write_metrics_jsonl",
     "parse_prometheus_text",
     # SLO plane + wire surface + profiling
-    "SLO", "SloPlane", "BurnWindow", "DEFAULT_WINDOWS",
+    "SLO", "SloObserver", "SloPlane", "BurnWindow", "DEFAULT_WINDOWS",
     "LatencyObjective", "RatioObjective", "default_slos",
     "MetricsServer", "profile",
 ]

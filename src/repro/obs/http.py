@@ -89,14 +89,26 @@ class MetricsServer:
     slo_plane : an `slo.SloPlane` whose `check()` backs ``/slo``.
     host, port : bind address; `port=0` (default) picks an ephemeral port,
         available as `self.port` after `start()`.
+    observe_period_s : when set (and an `slo_plane` is attached), `start()`
+        also spins up an `slo.SloObserver` daemon sampling the plane's
+        burn-rate rings every that many seconds, so ``/slo`` verdicts stay
+        window-accurate even when nobody scrapes and the serving loop
+        stalls. The observer is stopped (cleanly, mid-sleep) on `stop()`.
+    observe_clock : injectable clock for that observer (tests drive the
+        rings with logical ticks).
     """
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
-                 slo_plane=None, host: str = "127.0.0.1", port: int = 0):
+                 slo_plane=None, host: str = "127.0.0.1", port: int = 0,
+                 observe_period_s: Optional[float] = None,
+                 observe_clock=None):
         self.registry = registry if registry is not None else REGISTRY
         self.slo_plane = slo_plane
         self.host = host
         self.port = int(port)
+        self.observe_period_s = observe_period_s
+        self.observe_clock = observe_clock
+        self.observer = None
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
         self._t_start = time.monotonic()
@@ -112,11 +124,19 @@ class MetricsServer:
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         daemon=True, name="obs-http")
         self._thread.start()
+        if self.observe_period_s is not None and self.slo_plane is not None:
+            from .slo import SloObserver   # local: no import cycle at load
+            self.observer = SloObserver(self.slo_plane,
+                                        period_s=self.observe_period_s,
+                                        clock=self.observe_clock).start()
         return self
 
     def stop(self) -> None:
         if self._httpd is None:
             return
+        if self.observer is not None:
+            self.observer.stop()
+            self.observer = None
         self._httpd.shutdown()
         self._httpd.server_close()
         if self._thread is not None:

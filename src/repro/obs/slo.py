@@ -42,6 +42,7 @@ the metric names the region completion layer maintains.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -49,7 +50,7 @@ from .metrics import Histogram, MetricsRegistry, REGISTRY
 
 __all__ = [
     "BurnWindow", "DEFAULT_WINDOWS", "LatencyObjective", "RatioObjective",
-    "SLO", "SloPlane", "default_slos",
+    "SLO", "SloObserver", "SloPlane", "default_slos",
 ]
 
 
@@ -238,6 +239,74 @@ class SloPlane:
         reg.gauge("slo_breaching",
                   slo=slo.name).set(1.0 if verdict == "breach" else 0.0)
         reg.counter("slo_checks", slo=slo.name).inc()
+
+
+class SloObserver:
+    """Timer-driven `SloPlane.observe()` on a daemon thread.
+
+    Burn-rate windows need *regularly spaced* ring samples: a plane only
+    sampled from the serving loop goes blind exactly when serving stalls —
+    the incident the SLOs exist to catch. The observer decouples sampling
+    from traffic: every `period_s` it calls `plane.observe(clock())`.
+
+    * `clock` is injectable (default `time.monotonic`): tests drive
+      burn-rate math with logical ticks and never sleep through windows.
+    * the loop waits on a `threading.Event`, so `stop()` interrupts a
+      sleeping observer immediately — no stray period-length hang at
+      shutdown (`MetricsServer` stops its observer on exit).
+    * sampling is pure registry reads (no device work, no compiles), so a
+      short period is cheap; `ticks` counts completed observations.
+
+    Use standalone (`start()`/`stop()`, or as a context manager) or let
+    `MetricsServer(observe_period_s=...)` own one.
+    """
+
+    def __init__(self, plane: SloPlane, period_s: float = 5.0,
+                 clock=None):
+        if period_s <= 0:
+            raise ValueError(
+                f"SloObserver: period_s must be positive, got {period_s}")
+        self.plane = plane
+        self.period_s = float(period_s)
+        self.clock = clock if clock is not None else time.monotonic
+        self.ticks = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _run(self) -> None:
+        # one sample up front: short-lived runs still get a ring entry
+        while True:
+            self.plane.observe(self.clock())
+            self.ticks += 1
+            if self._stop.wait(self.period_s):
+                return
+
+    def start(self) -> "SloObserver":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="slo-observer")
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "SloObserver":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
 
 
 def default_slos(latency_threshold_s: float = 0.5,

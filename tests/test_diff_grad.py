@@ -1,0 +1,244 @@
+"""Implicit-KKT gradient parity (PR 10): `repro.diff.solve_and_grad`
+against central finite differences of the forward `solve()` oracle on all
+three topologies (single cell, stacked fleet with per-cell weights, padded
+cell), pad-lane gradient zeroing, loose descent-direction checks for the
+one-sided channel leaves, and the zero-new-compiled-shapes guard.
+
+FD parity runs in float64 (the suite enables x64 in conftest) with a
+tight forward spec so the bisection floor sits well below the FD step.
+"""
+import dataclasses
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro import Problem, SolverSpec, Weights, make_system, solve
+from repro.diff import solve_and_grad
+from repro.region.batch import pad_system
+
+SPEC = SolverSpec(sp1_method="bisect", tol=1e-11, max_iters=300)
+RTOL = 1e-3
+LEAVES = ("kappa", "cycles", "samples")
+
+
+def _cast64(sysp):
+    d = {}
+    for f in dataclasses.fields(sysp):
+        v = getattr(sysp, f.name)
+        if f.name in ("resolutions", "active") or v is None:
+            d[f.name] = v
+        else:
+            d[f.name] = jnp.asarray(v, jnp.float64)
+    return type(sysp)(**d)
+
+
+def _single():
+    sysp = _cast64(make_system(jax.random.PRNGKey(3), n_devices=8))
+    return Problem(system=sysp, weights=Weights(0.4, 0.6, 0.3))
+
+
+def _padded():
+    base = _cast64(make_system(jax.random.PRNGKey(3), n_devices=6))
+    return Problem(system=pad_system(base, 8), weights=Weights(0.4, 0.6, 0.3))
+
+
+def _fleet():
+    cells = [_cast64(make_system(jax.random.PRNGKey(k), n_devices=8))
+             for k in (3, 5, 9)]
+    stack = jtu.tree_map(lambda *xs: jnp.stack(xs), *cells)
+    ws = [Weights(0.4, 0.6, 0.3), Weights(0.5, 0.5, 0.2),
+          Weights(0.3, 0.7, 0.4)]
+    return Problem(system=stack, weights=ws), cells, ws
+
+
+def _obj(problem):
+    return solve(problem, SPEC).objective
+
+
+def _fd_leaf(problem, name, mask=None, rel=1e-6):
+    """Central FD of solve()'s objective w.r.t. one SystemParams leaf."""
+    sysp = problem.system
+    v = jnp.asarray(getattr(sysp, name))
+    if v.ndim == 0:
+        h = abs(float(v)) * rel
+        op = _obj(dataclasses.replace(
+            problem, system=sysp.replace(**{name: v + h})))
+        om = _obj(dataclasses.replace(
+            problem, system=sysp.replace(**{name: v - h})))
+        return (op - om) / (2 * h)
+    out = []
+    for i in range(v.shape[0]):
+        if mask is not None and not bool(mask[i]):
+            out.append(0.0)
+            continue
+        h = max(abs(float(v[i])), 1e-12) * rel
+        op = _obj(dataclasses.replace(
+            problem, system=sysp.replace(**{name: v.at[i].add(h)})))
+        om = _obj(dataclasses.replace(
+            problem, system=sysp.replace(**{name: v.at[i].add(-h)})))
+        out.append(float((op - om) / (2 * h)))
+    return jnp.asarray(out)
+
+
+def _fd_weights(problem, rel=1e-6):
+    wr = jnp.asarray([problem.weights.w1, problem.weights.w2,
+                      problem.weights.rho], jnp.float64)
+    out = []
+    for i in range(3):
+        h = float(wr[i]) * rel
+        wp = Weights(*[float(x) for x in wr.at[i].add(h)])
+        wm = Weights(*[float(x) for x in wr.at[i].add(-h)])
+        op = _obj(dataclasses.replace(problem, weights=wp))
+        om = _obj(dataclasses.replace(problem, weights=wm))
+        out.append(float((op - om) / (2 * h)))
+    return jnp.asarray(out)
+
+
+def _assert_close(ad, fd, rtol=RTOL, floor=1e-12):
+    ad, fd = np.asarray(ad, float), np.asarray(fd, float)
+    denom = np.maximum(np.abs(fd), floor)
+    rel = np.max(np.abs(ad - fd) / denom)
+    assert rel <= rtol, f"max rel err {rel:.3e} (ad={ad}, fd={fd})"
+
+
+# ---------------------------------------------------------------------------
+# value consistency: solve_and_grad's primal IS the forward solve
+# ---------------------------------------------------------------------------
+
+def test_value_matches_solve_single_and_padded():
+    for prob in (_single(), _padded()):
+        g = solve_and_grad(prob, SPEC, wrt=("kappa",))
+        r = solve(prob, SPEC)
+        np.testing.assert_allclose(float(g.value["objective"]),
+                                   float(r.objective), rtol=1e-8)
+        np.testing.assert_allclose(np.asarray(g.allocation.freq),
+                                   np.asarray(r.allocation.freq), rtol=1e-8)
+
+
+def test_value_matches_solve_fleet():
+    probf, _, _ = _fleet()
+    g = solve_and_grad(probf, SPEC, wrt=("kappa",))
+    r = solve(probf, SPEC)
+    np.testing.assert_allclose(np.asarray(g.value["objective"]),
+                               np.asarray(r.objective), rtol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# FD parity: single cell
+# ---------------------------------------------------------------------------
+
+def test_single_cell_weights_fd_parity():
+    prob = _single()
+    g = solve_and_grad(prob, SPEC, wrt=())
+    _assert_close(g.grads["objective"]["weights"], _fd_weights(prob))
+
+
+@pytest.mark.parametrize("leaf", LEAVES)
+def test_single_cell_leaf_fd_parity(leaf):
+    prob = _single()
+    g = solve_and_grad(prob, SPEC, wrt=LEAVES)
+    _assert_close(g.grads["objective"][leaf], _fd_leaf(prob, leaf))
+
+
+# ---------------------------------------------------------------------------
+# FD parity: fleet with per-cell weights (one vmapped program)
+# ---------------------------------------------------------------------------
+
+def test_fleet_kappa_fd_parity_per_cell():
+    probf, cells, ws = _fleet()
+    gf = solve_and_grad(probf, SPEC, wrt=("kappa",))
+    for c in range(3):
+        v = float(cells[c].kappa)
+        h = v * 1e-6
+
+        def obj_c(kv):
+            cc = [cells[i].replace(kappa=jnp.asarray(kv, jnp.float64))
+                  if i == c else cells[i] for i in range(3)]
+            st = jtu.tree_map(lambda *xs: jnp.stack(xs), *cc)
+            return float(solve(Problem(system=st, weights=ws),
+                               SPEC).objective[c])
+
+        fd = (obj_c(v + h) - obj_c(v - h)) / (2 * h)
+        ad = float(gf.grads["objective"]["kappa"][c])
+        _assert_close(ad, fd)
+
+
+def test_fleet_weights_fd_parity_cell0():
+    probf, cells, ws = _fleet()
+    gf = solve_and_grad(probf, SPEC, wrt=())
+    wr = jnp.asarray([ws[0].w1, ws[0].w2, ws[0].rho], jnp.float64)
+    for i in range(3):
+        h = float(wr[i]) * 1e-6
+
+        def obj_w(wv):
+            wmod = [Weights(*[float(x) for x in wv]) if c == 0 else ws[c]
+                    for c in range(3)]
+            return float(solve(dataclasses.replace(probf, weights=wmod),
+                               SPEC).objective[0])
+
+        fd = (obj_w(wr.at[i].add(h)) - obj_w(wr.at[i].add(-h))) / (2 * h)
+        ad = float(gf.grads["objective"]["weights"][0, i])
+        _assert_close(ad, fd)
+
+
+# ---------------------------------------------------------------------------
+# FD parity: padded cell (inactive lanes must not contaminate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leaf", LEAVES)
+def test_padded_leaf_fd_parity(leaf):
+    prob = _padded()
+    g = solve_and_grad(prob, SPEC, wrt=LEAVES)
+    mask = np.asarray(prob.system.active)
+    fd = _fd_leaf(prob, leaf, mask=None if leaf == "kappa" else mask)
+    _assert_close(g.grads["objective"][leaf], fd)
+
+
+def test_padded_pad_lane_grads_exactly_zero():
+    prob = _padded()
+    g = solve_and_grad(prob, SPEC, wrt=("cycles", "samples", "gain"))
+    pad = ~np.asarray(prob.system.active)
+    for m in ("objective", "energy", "time", "accuracy"):
+        for leaf in ("cycles", "samples", "gain"):
+            lanes = np.asarray(g.grads[m][leaf])[pad]
+            assert np.all(lanes == 0.0), (m, leaf, lanes)
+
+
+def test_padded_weights_fd_parity():
+    prob = _padded()
+    g = solve_and_grad(prob, SPEC, wrt=())
+    _assert_close(g.grads["objective"]["weights"], _fd_weights(prob))
+
+
+# ---------------------------------------------------------------------------
+# channel-side leaves: one-sided KKT derivatives — descent directions only
+# ---------------------------------------------------------------------------
+
+def test_gain_grad_finite_and_descent_direction():
+    prob = _single()
+    g = solve_and_grad(prob, SPEC, wrt=("gain",))
+    gg = np.asarray(g.grads["objective"]["gain"])
+    assert np.all(np.isfinite(gg))
+    # better channel never makes the realized objective worse
+    assert np.all(gg <= 1e-9), gg
+
+
+# ---------------------------------------------------------------------------
+# compile-count guard: repeat solves add zero compiled shapes
+# ---------------------------------------------------------------------------
+
+def test_grad_no_new_compiled_shapes(compile_counter):
+    prob = _single()
+    solve_and_grad(prob, SPEC, wrt=LEAVES)          # warm the cache
+    before = compile_counter.count
+    g = solve_and_grad(prob, SPEC, wrt=LEAVES)
+    jax.block_until_ready(g.value["objective"])
+    assert compile_counter.count == before, (
+        f"{compile_counter.count - before} recompiles on a repeated "
+        "solve_and_grad with identical shapes/spec")

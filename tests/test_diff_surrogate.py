@@ -1,0 +1,184 @@
+"""Learned accuracy surrogate + weight auto-tuning (PR 10): shape
+properties of `fit_surrogate` (monotone nondecreasing, concave in s, mean
+preservation) as hypothesis property tests, the non-default-menu
+round-trip through `round_resolution` / `map_resolution_to_dataset`
+(satellite c), `solve()` compatibility of `SurrogateAccuracy`, and smoke
+coverage for `tune_weights` / `pareto_sweep`.
+"""
+import dataclasses
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro import Problem, SolverSpec, Weights, make_system, solve
+from repro.core.accuracy import FIG7_RESOLUTIONS, menu_of
+from repro.core.sp1 import round_resolution
+from repro.diff import (SurrogateAccuracy, fit_surrogate, pareto_front,
+                        pareto_sweep, problem_with_surrogate, solve_and_grad,
+                        tune_weights, weight_grid)
+from repro.fl.simulator import map_resolution_to_dataset
+
+SPEC = SolverSpec(sp1_method="bisect", tol=1e-9, max_iters=200)
+MENU6 = (100.0, 200.0, 300.0, 400.0, 500.0, 600.0)
+
+
+def _sys(n=6, key=0):
+    return make_system(jax.random.PRNGKey(key), n_devices=n)
+
+
+# ---------------------------------------------------------------------------
+# fit_surrogate: shape properties (hypothesis, stub-degradable)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                min_size=4, max_size=8),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_fit_surrogate_monotone_and_concave(accs, seed):
+    rng = np.random.default_rng(seed)
+    menu = np.sort(rng.uniform(50.0, 1000.0, size=len(accs)))
+    menu += np.arange(len(accs))          # strictly increasing
+    model = fit_surrogate(menu, accs, menu=tuple(menu))
+
+    grid = np.geomspace(menu[0], menu[-1], 64)
+    v = np.asarray(model.value(grid))
+    d = np.asarray(model.deriv(grid))
+    # monotone nondecreasing in s
+    assert np.all(np.diff(v) >= -1e-9), v
+    assert np.all(d >= -1e-12), d
+    # concave in s: dA/ds nonincreasing along increasing s
+    assert np.all(np.diff(d) <= 1e-9), d
+    # fitted values reproduce the isotonic+concave projection's mean
+    fitted = np.asarray(model.value(np.asarray(menu)))
+    np.testing.assert_allclose(fitted.mean(), np.mean(accs), atol=1e-8)
+
+
+def test_fit_surrogate_exact_on_clean_concave_data():
+    menu = np.asarray(FIG7_RESOLUTIONS, float)
+    accs = 0.9 - 0.5 / np.sqrt(menu / 100.0)      # concave, increasing
+    model = fit_surrogate(menu, accs)
+    np.testing.assert_allclose(np.asarray(model.value(menu)), accs,
+                               atol=1e-8)
+    assert menu_of(model) == tuple(menu)
+
+
+def test_surrogate_requires_two_knots():
+    with pytest.raises(ValueError):
+        SurrogateAccuracy(knots=(1.0,), values=(0.5,), menu=(100.0,))
+
+
+# ---------------------------------------------------------------------------
+# menu round-trip (satellite c): non-default menus survive the snap
+# ---------------------------------------------------------------------------
+
+def test_problem_with_surrogate_installs_menu_and_solves():
+    accs = [0.3, 0.45, 0.55, 0.6, 0.63, 0.65]
+    model = fit_surrogate(MENU6, accs, menu=MENU6)
+    prob = problem_with_surrogate(
+        Problem(system=_sys(), weights=Weights(0.5, 0.5, 0.3)), model)
+    assert prob.system.resolutions == MENU6
+    r = solve(prob, SPEC)
+    res = np.asarray(r.allocation.resolution)
+    assert set(np.unique(res)).issubset(set(MENU6)), res
+
+
+def test_round_resolution_respects_installed_menu():
+    sysp = _sys().replace(resolutions=MENU6)
+    snapped = round_resolution(sysp, jnp.asarray([90.0, 260.0, 640.0]))
+    np.testing.assert_allclose(np.asarray(snapped), [100.0, 300.0, 600.0])
+
+
+def test_map_resolution_rank_relative_on_long_menu():
+    sysp = _sys().replace(resolutions=MENU6)
+    ds = map_resolution_to_dataset(
+        sysp, jnp.asarray([100.0, 290.0, 610.0]), (4, 8, 12, 16))
+    np.testing.assert_array_equal(np.asarray(ds), [4, 8, 16])
+
+
+def test_map_resolution_identity_when_lengths_match():
+    sysp = _sys()   # default Fig. 7 menu, len 4
+    menu = jnp.asarray(sysp.resolutions)
+    ds = map_resolution_to_dataset(sysp, menu, (8, 16, 24, 32))
+    np.testing.assert_array_equal(np.asarray(ds), [8, 16, 24, 32])
+
+
+def test_surrogate_gradients_finite():
+    accs = [0.3, 0.45, 0.55, 0.6, 0.63, 0.65]
+    model = fit_surrogate(MENU6, accs, menu=MENU6)
+    prob = problem_with_surrogate(
+        Problem(system=_sys(), weights=Weights(0.5, 0.5, 0.3)), model)
+    g = solve_and_grad(prob, SPEC, wrt=("kappa",))
+    assert np.isfinite(float(g.value["objective"]))
+    assert np.isfinite(float(g.grads["objective"]["kappa"]))
+    assert np.all(np.isfinite(np.asarray(g.grads["objective"]["weights"])))
+
+
+# ---------------------------------------------------------------------------
+# tune_weights: a mis-weighted scenario is pulled onto its latency budget
+# ---------------------------------------------------------------------------
+
+def test_tune_weights_meets_latency_target():
+    prob = Problem(system=_sys(n=8, key=3), weights=Weights(0.9, 0.1, 0.3))
+    # total-time metric (global_rounds x per-round makespan) — the units
+    # tune_weights budgets against
+    t0 = float(solve_and_grad(prob, SPEC, wrt=()).value["time"])
+    target = 0.9 * t0
+    out = tune_weights(prob, SPEC, target_time=target, steps=16)
+    assert out.met, out
+    assert float(out.target_time) == pytest.approx(target)
+    # the tuned weights actually deliver the promised operating point
+    tuned = solve_and_grad(
+        dataclasses.replace(prob, weights=out.weights),
+        SPEC, wrt=())
+    assert float(tuned.value["time"]) <= target * (1 + 1e-6)
+    assert out.steps <= 16 and len(out.history) == out.steps
+
+
+def test_tune_weights_arg_validation():
+    prob = Problem(system=_sys(), weights=Weights(0.5, 0.5, 0.3))
+    with pytest.raises(ValueError):
+        tune_weights(prob, SPEC)                       # neither target
+    with pytest.raises(ValueError):
+        tune_weights(prob, SPEC, target_time=1.0, slos=())   # both
+
+
+# ---------------------------------------------------------------------------
+# pareto_sweep: one compiled fleet program, non-dominated frontier
+# ---------------------------------------------------------------------------
+
+def test_pareto_sweep_frontier():
+    prob = Problem(system=_sys(n=6, key=3), weights=Weights(0.5, 0.5, 0.3))
+    res = pareto_sweep(prob, SPEC, n=7)
+    assert res.weights.shape == (7, 3)
+    e = np.asarray(res.value["energy"], float)
+    t = np.asarray(res.value["time"], float)
+    assert np.all(np.isfinite(e)) and np.all(np.isfinite(t))
+    assert res.front.any()
+    # every frontier point is genuinely non-dominated
+    for i in np.flatnonzero(res.front):
+        dominated = (e <= e[i]) & (t <= t[i]) & ((e < e[i]) | (t < t[i]))
+        assert not dominated.any(), i
+
+
+def test_pareto_front_mask_math():
+    e = np.asarray([3.0, 2.0, 1.0, 2.5, np.nan])
+    t = np.asarray([1.0, 2.0, 3.0, 2.5, 0.5])
+    front = pareto_front(e, t)
+    np.testing.assert_array_equal(front, [True, True, True, False, False])
+
+
+def test_weight_grid_shape_and_normalizable():
+    g = weight_grid(n=9, rho=0.25)
+    assert g.shape == (9, 3)
+    assert np.all(g[:, 2] == 0.25)
+    assert np.all(g[:, :2] > 0)

@@ -201,10 +201,11 @@ def test_fleet_matches_per_cell_runs():
     assert rf.ledger.shape == (3, 4, len(rf.columns))
     cells = [jax.tree_util.tree_map(lambda x: x[c], fleet) for c in range(3)]
     # the sp2_evals column is an *effort* counter from the SP2 dual search's
-    # certainty early-exit: its stopping comparisons sit on reduction results
-    # that can differ by an ulp between the vmapped and single-cell
-    # lowerings, so the count may slip by a step or two while every
-    # solution column stays bit-stable — compare it with integer slack
+    # certainty early-exit AND the warm-started Newton polish: both stopping
+    # predicates sit on reduction results that can differ by an ulp between
+    # the vmapped and single-cell lowerings, and a flipped Newton exit moves
+    # the count by a whole inner search (~tens of evals) while every
+    # solution column stays bit-stable — compare it with relative slack
     ev_col = rf.columns.index("sp2_evals")
     sol_cols = [i for i in range(len(rf.columns)) if i != ev_col]
     for c, kc in enumerate(jax.random.split(key, 3)):
@@ -212,7 +213,8 @@ def test_fleet_matches_per_cell_runs():
         lf, lc = np.asarray(rf.ledger[c]), np.asarray(rc.ledger)
         np.testing.assert_allclose(lf[:, sol_cols], lc[:, sol_cols],
                                    rtol=1e-9, atol=1e-12)
-        np.testing.assert_allclose(lf[:, ev_col], lc[:, ev_col], atol=4)
+        np.testing.assert_allclose(lf[:, ev_col], lc[:, ev_col],
+                                   rtol=0.2, atol=8)
         np.testing.assert_array_equal(np.asarray(rf.staleness[c]),
                                       np.asarray(rc.staleness))
 

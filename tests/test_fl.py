@@ -126,9 +126,16 @@ def test_map_resolution_to_dataset_vectorized():
     out = map_resolution_to_dataset(sysp, s, (4, 8, 12, 16))
     assert jnp.issubdtype(out.dtype, jnp.integer)
     np.testing.assert_array_equal(np.asarray(out), [4, 8, 12, 16])
-    # shorter dataset menus clip to the last entry
+    # shorter dataset menus map by relative rank (menu-aware, monotone)
     out2 = map_resolution_to_dataset(sysp, s, (4, 8))
-    np.testing.assert_array_equal(np.asarray(out2), [4, 8, 8, 8])
+    np.testing.assert_array_equal(np.asarray(out2), [4, 4, 8, 8])
+    # a non-default (surrogate-fitted) menu maps by ITS OWN ranks: no
+    # re-snapping to the Fig. 7 grid
+    sys6 = sysp.replace(resolutions=(100.0, 200.0, 300.0, 400.0, 500.0,
+                                     600.0))
+    s6 = jnp.asarray([100.0, 290.0, 610.0])
+    out6 = map_resolution_to_dataset(sys6, s6, (4, 8, 12, 16))
+    np.testing.assert_array_equal(np.asarray(out6), [4, 8, 16])
     # jit-safe (usable inside a scan)
     out3 = jax.jit(
         lambda r: map_resolution_to_dataset(sysp, r, (4, 8, 12, 16)))(s)

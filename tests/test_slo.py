@@ -387,3 +387,77 @@ def test_compare_slo_gate():
     extra = parse_derived("slo_breaches=0;slo_deadline_hit_rate_ok=1;"
                           "slo_bcd_convergence_ok=1;slo_new_ok=0")
     assert slo_regressions("slo.serve.R48", extra, base) == []
+
+
+# ---------------------------------------------------------------------------
+# SloObserver: timer-driven observe() daemon (PR 10 satellite)
+# ---------------------------------------------------------------------------
+
+def test_slo_observer_logical_clock_and_shutdown():
+    from repro.obs import MetricsRegistry, SloObserver
+
+    reg = MetricsRegistry()
+    plane = SloPlane(default_slos(), registry=reg)
+    ticks = [0.0]
+
+    def clock():
+        ticks[0] += 1.0
+        return ticks[0]
+
+    obs_d = SloObserver(plane, period_s=0.01, clock=clock)
+    assert not obs_d.running
+    obs_d.start()
+    assert obs_d.running
+    deadline = time.monotonic() + 5.0
+    while obs_d.ticks < 3 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    t0 = time.monotonic()
+    obs_d.stop(timeout=5.0)
+    # stop() returns promptly (Event interrupts the sleep, no period wait)
+    assert time.monotonic() - t0 < 1.0
+    assert not obs_d.running
+    assert obs_d.ticks >= 3
+    # samples landed in the plane's rings with the injected timestamps
+    ring = plane._rings[plane.slos[0].name]
+    assert len(ring) == obs_d.ticks
+    assert ring[0][0] == 1.0 and ring[1][0] == 2.0
+    # idempotent stop, restartable handle is NOT promised — but stop twice
+    # must not raise
+    obs_d.stop()
+
+
+def test_slo_observer_context_manager_and_period_guard():
+    from repro.obs import MetricsRegistry, SloObserver
+
+    reg = MetricsRegistry()
+    plane = SloPlane(default_slos(), registry=reg)
+    with SloObserver(plane, period_s=0.01) as obs_d:
+        deadline = time.monotonic() + 5.0
+        while obs_d.ticks < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+    assert not obs_d.running and obs_d.ticks >= 1
+    with pytest.raises(ValueError):
+        SloObserver(plane, period_s=0.0)
+
+
+def test_metrics_server_starts_and_stops_observer():
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    plane = SloPlane(default_slos(), registry=reg)
+    srv = MetricsServer(registry=reg, slo_plane=plane, observe_period_s=0.01)
+    with srv:
+        assert srv.observer is not None and srv.observer.running
+        deadline = time.monotonic() + 5.0
+        while srv.observer.ticks < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert srv.observer.ticks >= 1
+        # /slo still serves while the observer samples in the background
+        status, _, body = _get(srv.url("/slo"))
+        assert status == 200 and "slos" in json.loads(body)
+    assert srv.observer is None
+
+    # no plane -> no observer, even with a period configured
+    srv2 = MetricsServer(registry=reg, observe_period_s=0.01)
+    with srv2:
+        assert srv2.observer is None

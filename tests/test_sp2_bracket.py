@@ -99,3 +99,24 @@ def test_ledger_carries_measured_eval_count():
     ref = direct_eval_counts(jnp.float64)
     for row in res.history:
         assert 0 < row["sp2_iters"] < ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32])
+@pytest.mark.parametrize("slack", [1.05, 1.2, 2.0])
+def test_newton_polish_parity_and_eval_drop(dtype, slack):
+    """Warm-started Newton on the smooth pmin-branch stationarity (PR 10):
+    same transmit energy as the safeguarded sign-bisection to <= 1e-6,
+    budget/rate feasibility intact, and strictly fewer dE/dB evals than
+    the bisection-only carried path."""
+    sysp, rmin = _sp2_case(dtype, seed=2, n=50, slack=slack)
+    p_n, B_n, ev_n = _sp2_direct_impl(sysp, rmin, True, True)
+    p_b, B_b, ev_b = _sp2_direct_impl(sysp, rmin, True, False)
+    e_n, e_b = _trans_energy(sysp, p_n, B_n), _trans_energy(sysp, p_b, B_b)
+    assert abs(e_n - e_b) / max(abs(e_b), 1e-30) <= 1e-6
+    assert float(jnp.sum(B_n)) <= float(sysp.bandwidth_total) * (1 + 1e-6)
+    assert bool(jnp.all(G(sysp, p_n, B_n) >= rmin * (1 - 1e-5)))
+    # Newton never costs extra evals; on tight deadlines (the pmin branch
+    # the satellite targets) it must strictly cut them
+    assert int(ev_n) <= int(ev_b), (int(ev_n), int(ev_b))
+    if slack <= 1.2:
+        assert int(ev_n) < int(ev_b), (int(ev_n), int(ev_b))
